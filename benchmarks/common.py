@@ -1,0 +1,36 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+
+from __future__ import annotations
+
+import sys
+import time
+from typing import Any, Callable, Sequence
+
+
+def time_call(fn: Callable[..., Any], args: Sequence[Any], repeats: int = 3,
+              warmup: int = 1) -> float:
+    """Median seconds per call (device-blocking)."""
+    def block(x):
+        if hasattr(x, "block_until_ready"):
+            x.block_until_ready()
+        elif isinstance(x, (tuple, list)):
+            for e in x:
+                block(e)
+
+    for _ in range(warmup):
+        block(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        block(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    print(f"{name},{seconds*1e6:.1f},{derived}", flush=True)
+
+
+def emit_header() -> None:
+    print("name,us_per_call,derived", flush=True)

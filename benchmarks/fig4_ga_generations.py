@@ -1,0 +1,50 @@
+"""Paper Fig. 4: best performance (vs all-CPU) per GA generation for the
+Fourier-transform application under prior-work loop offloading [33]."""
+
+from __future__ import annotations
+
+import argparse
+import warnings
+
+from benchmarks.common import emit
+
+
+def run(n: int = 192, generations: int = 8, population: int = 8,
+        seed: int = 0) -> list[float]:
+    warnings.filterwarnings("ignore")
+    from repro.apps import fourier
+    from repro.core import run_ga
+
+    x = fourier.make_input(n)
+    rep = run_ga(
+        fourier.build_fft_variant,
+        n_genes=len(fourier.FFT_STAGES),
+        args=(x,),
+        population=population,
+        generations=generations,
+        repeats=1,
+        seed=seed,
+    )
+    for gen, speedup in enumerate(rep.generations):
+        emit(f"fig4.gen{gen}", rep.baseline_seconds / max(speedup, 1e-9),
+             f"best_speedup={speedup:.2f}x")
+    emit(
+        "fig4.final", rep.best_seconds,
+        f"best_speedup={rep.best_speedup:.2f}x genome="
+        f"{''.join(map(str, rep.best_genome))} evals={rep.evaluations} "
+        f"search={rep.search_seconds:.1f}s",
+    )
+    return rep.generations
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=192)
+    ap.add_argument("--generations", type=int, default=8)
+    ap.add_argument("--population", type=int, default=8)
+    args = ap.parse_args()
+    run(args.n, args.generations, args.population)
+
+
+if __name__ == "__main__":
+    main()

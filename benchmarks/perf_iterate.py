@@ -1,0 +1,114 @@
+"""Perf hillclimbing harness (EXPERIMENTS.md §Perf).
+
+Runs one evaluation cell under a sequence of named override variants,
+recording the three roofline terms per variant into
+results/perf_iterations.json.  Each entry is one hypothesis->change->
+measure iteration; the narrative lives in EXPERIMENTS.md.
+
+  PYTHONPATH=src python -m benchmarks.perf_iterate --arch command-r-35b \
+      --shape train_4k --variant baseline --variant bf16_params ...
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+# variant name -> overrides dict
+VARIANTS = {
+    "baseline": {},
+    "bf16_params": {"param_dtype": "bfloat16"},
+    "bf16_params_mb1": {"param_dtype": "bfloat16", "microbatch": 1},
+    "bf16_params_mb1_bf16scores": {
+        "param_dtype": "bfloat16", "microbatch": 1,
+        "scores_dtype": "bfloat16",
+    },
+    "bf16_mb1": {"microbatch": 1, "param_dtype": "bfloat16",
+                 "opt_dtype": "bfloat16"},
+    "ep_psum": {"ep_mode": "psum"},
+    "ep_psum_mb1": {"ep_mode": "psum", "microbatch": 1},
+    "ep_psum_mb1_bf16scores": {
+        "ep_mode": "psum", "microbatch": 1, "scores_dtype": "bfloat16",
+    },
+    "mb1": {"microbatch": 1},
+    "mb4": {"microbatch": 4},
+    "bf16scores": {"scores_dtype": "bfloat16"},
+    "mixednorm": {"norm_precision": "mixed"},
+    "mixednorm_bf16scores": {"norm_precision": "mixed",
+                             "scores_dtype": "bfloat16"},
+    "ep_psum_mixednorm": {"ep_mode": "psum", "norm_precision": "mixed"},
+    "bf16reduce": {"bf16_tp_reduce": True},
+    "bf16reduce_mixednorm": {"bf16_tp_reduce": True,
+                             "norm_precision": "mixed"},
+    "ep_psum_bf16reduce_mixednorm": {
+        "ep_mode": "psum", "bf16_tp_reduce": True, "norm_precision": "mixed",
+    },
+    "megatron": {"bf16_tp_reduce": True, "megatron_mlp": True},
+    "megatron_mixednorm": {"bf16_tp_reduce": True, "megatron_mlp": True,
+                           "norm_precision": "mixed"},
+    "ep_psum_megatron": {"ep_mode": "psum", "bf16_tp_reduce": True,
+                         "megatron_mlp": True},
+    "save_moe": {"remat_policy": "save_moe"},
+    "save_moe_megatron": {"remat_policy": "save_moe", "bf16_tp_reduce": True,
+                          "megatron_mlp": True},
+    # arctic: 56 q-heads don't divide the 16-way model axis; pad to 64
+    # zero-initialised heads (mathematically inert) so attention shards
+    "pad_heads64": {"n_heads": 64},
+    "pad_heads64_megatron": {"n_heads": 64, "bf16_tp_reduce": True,
+                             "megatron_mlp": True},
+    "pad_heads64_megatron_savemoe": {
+        "n_heads": 64, "bf16_tp_reduce": True, "megatron_mlp": True,
+        "remat_policy": "save_moe",
+    },
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", action="append", required=True)
+    ap.add_argument("--out", default="results/perf_iterations.json")
+    args = ap.parse_args()
+
+    from benchmarks.roofline import analyze_record
+    from repro.launch.dryrun import run_cell
+
+    out_path = pathlib.Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = []
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    for vname in args.variant:
+        ov = VARIANTS[vname]
+        rec = run_cell(args.arch, args.shape, args.multi_pod, overrides=ov)
+        rec["variant"] = vname
+        a = analyze_record(rec) or {}
+        rec.update({f"term_{k}": v for k, v in a.items()
+                    if k.endswith("_s") or k in ("dominant", "roofline_fraction",
+                                                 "useful_ratio")})
+        results.append(rec)
+        out_path.write_text(json.dumps(results, indent=1))
+        if rec["status"] == "ok":
+            print(
+                f"{args.arch} x {args.shape} [{vname}]: "
+                f"comp={a['compute_s']:.2f}s mem={a['memory_s']:.2f}s "
+                f"coll={a['collective_s']:.2f}s dom={a['dominant']} "
+                f"frac={a['roofline_fraction']:.3f} "
+                f"peak={rec['peak_bytes_per_device']/1e9:.1f}GB",
+                flush=True,
+            )
+        else:
+            print(f"{args.arch} x {args.shape} [{vname}]: {rec['status']} "
+                  f"{rec.get('error','')[:200]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Reads results/dryrun.json (produced by repro.launch.dryrun) and derives,
+per (arch x shape x mesh):
+
+    compute term    = HLO_FLOPs_global   / (chips * 197 TF/s)
+    memory term     = HLO_bytes_global   / (chips * 819 GB/s)
+    collective term = coll_bytes_global  / (chips * 50 GB/s)
+
+(global = per-device value x chips; the dry-run records per-device numbers
+from the post-SPMD module, loop-aware — see launch/hlo_cost.py.)
+
+Also reports MODEL_FLOPS = 6*N*D (train) or 2*N*D (inference), the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPS, the dominant term, and the
+roofline fraction = max(model-flops time) / (sum of the three terms) — the
+"how close to the roofline would this run" score under a no-overlap
+assumption (pessimistic; overlapped collectives only improve it).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.launch.mesh import HW
+
+
+def analyze_record(r: dict) -> dict | None:
+    if r.get("status") != "ok":
+        return None
+    chips = r["chips"]
+    flops = r["hlo_flops_per_device"]
+    hbm = r["hlo_bytes_per_device"]
+    coll = r.get("collective_bytes_per_device", 0.0)
+    t_compute = flops / HW["peak_flops_bf16"]
+    t_memory = hbm / HW["hbm_bw"]
+    t_coll = coll / HW["ici_bw"]
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = r.get("model_flops", 0.0)
+    t_model = model_flops / chips / HW["peak_flops_bf16"]
+    total = t_compute + t_memory + t_coll
+    # TPU projection: the CPU backend float-normalizes EVERY bf16 collective
+    # to f32 (verified: zero bf16 collectives across all compiled cells), so
+    # collective bytes measure 2x the native-bf16 TPU value.
+    total_proj = t_compute + t_memory + t_coll / 2
+    return {
+        "roofline_fraction_tpu_proj": (t_model / total_proj) if total_proj else 0.0,
+        "arch": r["arch"],
+        "shape": r["shape"],
+        "mesh": r["mesh"],
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": flops * chips,
+        "useful_ratio": (model_flops / (flops * chips)) if flops else 0.0,
+        "roofline_fraction": (t_model / total) if total else 0.0,
+        "peak_gb": r.get("peak_bytes_per_device", 0) / 1e9,
+        "fits_16gb": r.get("fits_16gb"),
+    }
+
+
+def run(path: str = "results/dryrun.json", mesh: str | None = "16x16",
+        emit_csv: bool = True) -> list[dict]:
+    from benchmarks.common import emit
+
+    data = json.loads(pathlib.Path(path).read_text())
+    rows = []
+    for r in data:
+        if mesh and r.get("mesh") != mesh:
+            continue
+        a = analyze_record(r)
+        if a is None:
+            continue
+        rows.append(a)
+        if emit_csv:
+            emit(
+                f"roofline.{a['arch']}.{a['shape']}.{a['mesh']}",
+                a["compute_s"] + a["memory_s"] + a["collective_s"],
+                f"dom={a['dominant']} comp={a['compute_s']:.3f}s "
+                f"mem={a['memory_s']:.3f}s coll={a['collective_s']:.3f}s "
+                f"useful={a['useful_ratio']:.2f} "
+                f"roofline={a['roofline_fraction']:.3f} "
+                f"tpu_proj={a['roofline_fraction_tpu_proj']:.3f}",
+            )
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "dominant | useful ratio | roofline frac | tpu proj | peak GB |\n"
+        "|---|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for a in rows:
+        lines.append(
+            f"| {a['arch']} | {a['shape']} | {a['mesh']} "
+            f"| {a['compute_s']:.3f} | {a['memory_s']:.3f} "
+            f"| {a['collective_s']:.3f} | {a['dominant']} "
+            f"| {a['useful_ratio']:.2f} | {a['roofline_fraction']:.3f} "
+            f"| {a['roofline_fraction_tpu_proj']:.3f} | {a['peak_gb']:.1f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default="results/dryrun.json")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 or 2x16x16")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = run(args.path, args.mesh, emit_csv=not args.markdown)
+    if args.markdown:
+        print(markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick versions
+  PYTHONPATH=src python -m benchmarks.run --full     # + paper-scale timings
+
+CSV format: name,us_per_call,derived
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from benchmarks.common import emit_header
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="also time paper-scale (2048^2) offloaded blocks")
+    ap.add_argument("--dryrun-json", default="results/dryrun.json")
+    args = ap.parse_args()
+
+    emit_header()
+
+    from benchmarks import fig4_ga_generations, fig5_function_blocks, roofline
+
+    # Fig. 4: GA generations vs performance (loop offloading, prior work)
+    fig4_ga_generations.run(n=128, generations=6, population=6)
+
+    # Fig. 5: loop offload vs function-block offload speedups
+    fig5_function_blocks.run(
+        n_fft=128, n_lu=160, repeats=1, full=args.full
+    )
+
+    # Roofline terms per (arch x shape) from the dry-run, single-pod mesh
+    p = pathlib.Path(args.dryrun_json)
+    if p.exists():
+        roofline.run(str(p), mesh="16x16")
+    else:
+        print(f"# roofline skipped: {p} not found (run repro.launch.dryrun)",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

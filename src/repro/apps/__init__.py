@@ -1,0 +1,10 @@
+"""Evaluation applications (paper §5.1.1).
+
+Naive CPU-oriented ports of the *Numerical Recipes in C* routines the paper
+offloads: the 2-D FFT sample application and the LU-decomposition matrix
+application.  Written deliberately in loop-heavy "C translated to Python"
+style — they are the *offload source*, not the optimised shelf.
+"""
+
+from repro.apps import fourier, matrix  # noqa: F401
+from repro.apps.common import Stage, build_staged_variant  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401
+from repro.checkpoint.elastic import reshard_restore  # noqa: F401

@@ -1,0 +1,34 @@
+"""Elastic restore: bring a checkpoint up on a *different* mesh.
+
+Checkpoints store full (host) arrays, so elasticity is a placement problem:
+given the new mesh and the PartitionSpec tree for the new topology,
+``reshard_restore`` device_puts every leaf with its NamedSharding.  Scaling
+from 256 chips to 512 (or down to what survived a failure) is then just
+``reshard_restore(mgr, like, new_mesh, new_specs)`` — the sharding layer
+recomputes specs from the same logical rules, so no per-topology code.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def reshard_restore(
+    mgr: CheckpointManager,
+    like: Any,
+    mesh: Mesh,
+    specs: Any,
+    step: int | None = None,
+) -> tuple[int, Any]:
+    step, host_tree = mgr.restore(like, step)
+    placed = jax.tree.map(
+        lambda arr, spec: jax.device_put(arr, NamedSharding(mesh, spec)),
+        host_tree,
+        specs,
+    )
+    return step, placed

@@ -1,0 +1,31 @@
+"""Core: automatic function-block offloading (the paper's contribution).
+
+Public API:
+    OffloadEngine      Steps 1-3 for existing applications
+    CodePatternDB      the replacement registry (B-1/B-2)
+    default_db         the stock DB with the TPU kernel shelf
+    blocks             framework-native FunctionBlock registry
+    run_ga             prior-work loop-offload GA baseline
+"""
+
+from repro.core import blocks  # noqa: F401
+from repro.core.engine import AdaptedApp, Discovery, OffloadEngine  # noqa: F401
+from repro.core.ga import GAReport, run_ga  # noqa: F401
+from repro.core.interface import (  # noqa: F401
+    InterfaceMismatch,
+    InterfaceSpec,
+    Param,
+    Policy,
+    match_interfaces,
+)
+from repro.core.pattern_db import (  # noqa: F401
+    CodePatternDB,
+    ReplacementEntry,
+    default_db,
+)
+from repro.core.verify import (  # noqa: F401
+    VerificationReport,
+    measure,
+    search_offload_pattern,
+    verify_numerics,
+)

@@ -1,0 +1,114 @@
+"""FunctionBlock registry — the paper's technique as a first-class framework
+feature.
+
+Models in ``repro.models`` do not hard-code their compute implementations;
+they invoke *named function blocks* (``call("rmsnorm", ...)``).  Every block
+name has one or more registered implementations, tagged by execution target:
+
+    "ref"     pure-jnp oracle (the naive/XLA-default path)
+    "xla"     XLA-optimised jnp formulation
+    "pallas"  Pallas TPU kernel (the cuFFT/IP-core shelf)
+
+The offload engine's Step 3 selects a *binding* per block for the current
+environment — by verification-environment measurement on a real machine, or
+by dry-run cost analysis when only the compiler is available (the FPGA-style
+pre-filter).  Bindings are scoped via a context manager so a training step
+can be traced under a chosen offload pattern; this is how "offload pattern"
+becomes a compile-time property of the jitted program.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Iterator, Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class Impl:
+    block: str
+    target: str  # "ref" | "xla" | "pallas"
+    fn: Callable[..., Any]
+    note: str = ""
+
+
+class FunctionBlockRegistry:
+    def __init__(self) -> None:
+        self._impls: dict[str, dict[str, Impl]] = {}
+        self._local = threading.local()
+
+    # -- registration --------------------------------------------------------
+    def register(
+        self, block: str, target: str, fn: Callable[..., Any], note: str = ""
+    ) -> None:
+        self._impls.setdefault(block, {})[target] = Impl(block, target, fn, note)
+
+    def implementation(self, block: str, target: str) -> Impl:
+        return self._impls[block][target]
+
+    def blocks(self) -> list[str]:
+        return sorted(self._impls)
+
+    def targets(self, block: str) -> list[str]:
+        return sorted(self._impls.get(block, {}))
+
+    # -- binding --------------------------------------------------------------
+    @property
+    def _bindings(self) -> dict[str, str]:
+        b = getattr(self._local, "bindings", None)
+        if b is None:
+            b = {}
+            self._local.bindings = b
+        return b
+
+    @contextlib.contextmanager
+    def bind(self, mapping: Mapping[str, str]) -> Iterator[None]:
+        """Scope a block->target binding (an offload pattern)."""
+        saved = dict(self._bindings)
+        self._bindings.update(mapping)
+        try:
+            yield
+        finally:
+            self._local.bindings = saved
+
+    def resolve(self, block: str) -> Callable[..., Any]:
+        impls = self._impls.get(block)
+        if not impls:
+            raise KeyError(f"unknown function block '{block}'")
+        target = self._bindings.get(block)
+        if target is None:
+            # default preference: xla formulation, else ref
+            for t in ("xla", "ref", "pallas"):
+                if t in impls:
+                    return impls[t].fn
+            raise KeyError(f"block '{block}' has no usable implementation")
+        return impls[target].fn
+
+    def call(self, block: str, *args: Any, **kwargs: Any) -> Any:
+        return self.resolve(block)(*args, **kwargs)
+
+    def current_pattern(self) -> dict[str, str]:
+        return dict(self._bindings)
+
+
+# Global registry used by the model zoo.
+registry = FunctionBlockRegistry()
+
+
+def call(block: str, *args: Any, **kwargs: Any) -> Any:
+    return registry.call(block, *args, **kwargs)
+
+
+def bind(mapping: Mapping[str, str]):
+    return registry.bind(mapping)
+
+
+def register(block: str, target: str, note: str = ""):
+    """Decorator: ``@register("rmsnorm", "pallas")``."""
+
+    def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
+        registry.register(block, target, fn, note)
+        return fn
+
+    return deco

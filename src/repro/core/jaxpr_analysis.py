@@ -1,0 +1,148 @@
+"""Step-1 analysis for traced JAX programs (beyond-paper extension).
+
+C has no equivalent of a compute-graph trace; JAX does.  Next to the Python
+AST analyzer (the Clang analogue), this module walks a ``ClosedJaxpr`` to:
+
+* build a **primitive histogram** (the jaxpr counterpart of a Deckard
+  characteristic vector) for whole-program or per-subcall similarity,
+* detect **named sub-computations** (``pjit``/``custom_jvp``/``custom_vjp``
+  calls carry the wrapped function's name) — the A-1 "library call" analogue
+  at trace level,
+* detect structural features used by the offload pre-filter: dot_general /
+  conv / fft / scan / while presence, total dot FLOPs estimate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import Counter
+from typing import Any, Callable
+
+import jax
+import jax.extend.core as jex_core
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class NamedCall:
+    name: str
+    primitive: str
+    n_eqns: int
+
+
+@dataclasses.dataclass
+class JaxprReport:
+    histogram: dict[str, int]
+    named_calls: list[NamedCall]
+    dot_flops: float  # 2*M*N*K summed over dot_generals (static shapes)
+    has_scan: bool
+    has_while: bool
+
+    def intensity_hint(self, total_bytes: float) -> float:
+        if total_bytes <= 0:
+            return 0.0
+        return self.dot_flops / total_bytes
+
+
+def _sub_jaxprs(eqn) -> list[Any]:
+    subs = []
+    for v in eqn.params.values():
+        if isinstance(v, jex_core.ClosedJaxpr):
+            subs.append(v.jaxpr)
+        elif isinstance(v, jex_core.Jaxpr):
+            subs.append(v)
+        elif isinstance(v, (tuple, list)):
+            for e in v:
+                if isinstance(e, jex_core.ClosedJaxpr):
+                    subs.append(e.jaxpr)
+                elif isinstance(e, jex_core.Jaxpr):
+                    subs.append(e)
+    return subs
+
+
+def _count_eqns(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for sub in _sub_jaxprs(eqn):
+            n += _count_eqns(sub)
+    return n
+
+
+def _dot_flops(eqn) -> float:
+    try:
+        lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+        dnums = eqn.params["dimension_numbers"]
+        (lc, rc), (lb, rb) = dnums
+        m = math.prod(
+            d for i, d in enumerate(lhs.shape) if i not in set(lc) | set(lb)
+        )
+        n = math.prod(
+            d for i, d in enumerate(rhs.shape) if i not in set(rc) | set(rb)
+        )
+        k = math.prod(lhs.shape[i] for i in lc)
+        b = math.prod(lhs.shape[i] for i in lb)
+        return 2.0 * b * m * n * k
+    except Exception:  # pragma: no cover - defensive
+        return 0.0
+
+
+# primitive aliases: semantically-equal primitives that different source
+# spellings trace to (x**2 -> integer_pow, jnp.square -> square, ...)
+_CANON = {"square": "integer_pow", "pow": "integer_pow"}
+
+
+def analyze_jaxpr(closed: Any) -> JaxprReport:
+    hist: Counter[str] = Counter()
+    named: list[NamedCall] = []
+    dot_flops = 0.0
+
+    def walk(jaxpr, scale: float = 1.0) -> None:
+        nonlocal dot_flops
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            hist[_CANON.get(prim, prim)] += 1
+            if prim == "dot_general":
+                dot_flops += scale * _dot_flops(eqn)
+            name = eqn.params.get("name")
+            if isinstance(name, str):
+                subs = _sub_jaxprs(eqn)
+                n_eqns = sum(_count_eqns(s) for s in subs)
+                named.append(NamedCall(name=name, primitive=prim, n_eqns=n_eqns))
+            inner_scale = scale
+            if prim == "scan":
+                inner_scale = scale * float(eqn.params.get("length", 1))
+            for sub in _sub_jaxprs(eqn):
+                walk(sub, inner_scale)
+
+    walk(closed.jaxpr if hasattr(closed, "jaxpr") else closed)
+    return JaxprReport(
+        histogram=dict(hist),
+        named_calls=named,
+        dot_flops=dot_flops,
+        has_scan=hist.get("scan", 0) > 0,
+        has_while=hist.get("while", 0) > 0,
+    )
+
+
+def trace_report(fn: Callable[..., Any], *example_args: Any) -> JaxprReport:
+    closed = jax.make_jaxpr(fn)(*example_args)
+    return analyze_jaxpr(closed)
+
+
+def histogram_similarity(a: dict[str, int], b: dict[str, int]) -> float:
+    """Size-normalised L1 similarity between primitive histograms, the jaxpr
+    counterpart of Deckard vector distance."""
+    keys = set(a) | set(b)
+    dist = sum(abs(a.get(k, 0) - b.get(k, 0)) for k in keys)
+    denom = sum(a.values()) + sum(b.values())
+    if denom == 0:
+        return 1.0
+    return 1.0 - dist / denom
+
+
+def avals_of(*arrays: Any) -> tuple[jax.ShapeDtypeStruct, ...]:
+    return tuple(
+        jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype) for a in arrays
+    )

@@ -1,0 +1,61 @@
+"""Kernel shelf: Pallas TPU kernels (+ XLA formulations + jnp oracles).
+
+This package is the TPU analogue of the paper's accelerated-library shelf
+(cuFFT / cuBLAS / cuSOLVER / FPGA IP cores).  Importing it registers every
+kernel as a FunctionBlock implementation so the offload engine can bind
+ref/xla/pallas per deployment environment.
+"""
+
+import functools
+
+from repro.core import blocks
+from repro.kernels import ops, ref  # noqa: F401
+
+
+def _register_all() -> None:
+    r = blocks.registry
+    # matmul
+    r.register("matmul", "ref", ref.matmul_ref, "jnp.dot oracle")
+    r.register("matmul", "xla", ref.matmul_ref, "XLA dot")
+    r.register(
+        "matmul", "pallas",
+        functools.partial(ops.matmul, backend="pallas"),
+        "blocked MXU matmul",
+    )
+    # attention
+    r.register("attention", "ref", ref.attention_ref, "softmax einsum oracle")
+    r.register("attention", "xla", ref.attention_ref, "XLA attention")
+    r.register(
+        "attention", "pallas",
+        functools.partial(ops.flash_attention, backend="pallas"),
+        "flash attention, VMEM-tiled",
+    )
+    # rmsnorm
+    r.register("rmsnorm", "ref", ref.rmsnorm_ref, "jnp oracle")
+    r.register("rmsnorm", "xla", ref.rmsnorm_ref, "XLA rmsnorm")
+    r.register(
+        "rmsnorm", "pallas",
+        functools.partial(ops.rmsnorm, backend="pallas"),
+        "fused rmsnorm",
+    )
+    # ssd scan
+    r.register("ssd_scan", "ref", functools.partial(ops.ssd_scan, backend="ref"),
+               "sequential scan oracle")
+    r.register("ssd_scan", "xla", functools.partial(ops.ssd_scan, backend="xla"),
+               "chunked SSD, XLA")
+    r.register("ssd_scan", "pallas",
+               functools.partial(ops.ssd_scan, backend="pallas"),
+               "chunked SSD, Pallas intra-chunk")
+    # fft2d
+    r.register("fft2d", "xla", functools.partial(ops.fft2d, backend="xla"),
+               "XLA native fft2")
+    r.register("fft2d", "pallas", functools.partial(ops.fft2d, backend="pallas"),
+               "matmul-DFT on MXU")
+    # lu
+    r.register("lu", "xla", functools.partial(ops.lu, backend="xla"),
+               "blocked LU, XLA trailing update")
+    r.register("lu", "pallas", functools.partial(ops.lu, backend="pallas"),
+               "blocked LU, Pallas schur update")
+
+
+_register_all()

@@ -1,0 +1,128 @@
+"""Matmul-DFT — the TPU-native cuFFT analogue.
+
+A GPU FFT (cuFFT) is butterfly-based; butterflies are strided scalar work
+that wastes the MXU.  The TPU-native formulation of the paper's "replace the
+FFT block with a tuned library" is to express the DFT as dense matmuls that
+run on the systolic array:
+
+    2-D FFT:  Y = F_n @ X @ F_m        (DFT matrices are symmetric)
+
+Complex arithmetic maps to 4 real MXU matmuls per stage (re/im planes).
+The kernel below is a complex blocked matmul with two f32 VMEM accumulators;
+``ops.fft2d`` stacks two stages (rows then columns via transpose).
+
+Cost: direct DFT-matmul is O(n^2) per vector vs O(n log n) for a butterfly
+FFT — but it is MXU-dense.  The four-step factorisation (n = n1*n2, two
+matmul stages + twiddle) recovers most of the asymptotics while staying
+matmul-shaped; it is implemented in ``ops.fft2d(variant="four-step")`` and
+evaluated in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def dft_matrix(n: int, sign: float = -1.0) -> tuple[np.ndarray, np.ndarray]:
+    """Real/imag planes of the n-point DFT matrix F[k,j] = exp(sign*2pi i kj/n)."""
+    k = np.arange(n)
+    angles = sign * 2.0 * np.pi * np.outer(k, k) / n
+    return np.cos(angles).astype(np.float32), np.sin(angles).astype(np.float32)
+
+
+def _cmm_kernel(ar_ref, ai_ref, br_ref, bi_ref, or_ref, oi_ref,
+                accr_ref, acci_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accr_ref[...] = jnp.zeros_like(accr_ref)
+        acci_ref[...] = jnp.zeros_like(acci_ref)
+
+    ar = ar_ref[...]
+    ai = ai_ref[...]
+    br = br_ref[...]
+    bi = bi_ref[...]
+    accr_ref[...] += (
+        jnp.dot(ar, br, preferred_element_type=jnp.float32)
+        - jnp.dot(ai, bi, preferred_element_type=jnp.float32)
+    )
+    acci_ref[...] += (
+        jnp.dot(ar, bi, preferred_element_type=jnp.float32)
+        + jnp.dot(ai, br, preferred_element_type=jnp.float32)
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        or_ref[...] = accr_ref[...].astype(or_ref.dtype)
+        oi_ref[...] = acci_ref[...].astype(oi_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def complex_matmul_pallas(
+    ar: jax.Array,
+    ai: jax.Array,
+    br: jax.Array,
+    bi: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(ar+i*ai) @ (br+i*bi) as 4 real MXU matmuls, tiled like matmul."""
+    m, k = ar.shape
+    _, n = br.shape
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError("shapes must tile by block sizes; pad first")
+    grid = (m // block_m, n // block_n, k // block_k)
+    in_spec_a = pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk))
+    in_spec_b = pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j))
+    out_spec = pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j))
+    return pl.pallas_call(
+        functools.partial(_cmm_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[in_spec_a, in_spec_a, in_spec_b, in_spec_b],
+        out_specs=[out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(ar, ai, br, bi)
+
+
+def fft2d_pallas(x: jax.Array, *, interpret: bool = False,
+                 block: int = 128) -> jax.Array:
+    """2-D FFT of a complex array via two DFT matmul stages."""
+    n, m = x.shape
+    xr = jnp.real(x).astype(jnp.float32)
+    xi = jnp.imag(x).astype(jnp.float32)
+    fr_m, fi_m = dft_matrix(m)
+    # rows: X @ F_m  (F symmetric)
+    yr, yi = complex_matmul_pallas(
+        xr, xi, jnp.asarray(fr_m), jnp.asarray(fi_m),
+        block_m=min(block, n), block_n=min(block, m), block_k=min(block, m),
+        interpret=interpret,
+    )
+    fr_n, fi_n = dft_matrix(n)
+    # columns: F_n @ Y == (Y^T @ F_n)^T
+    zr, zi = complex_matmul_pallas(
+        yr.T, yi.T, jnp.asarray(fr_n), jnp.asarray(fi_n),
+        block_m=min(block, m), block_n=min(block, n), block_k=min(block, n),
+        interpret=interpret,
+    )
+    return (zr.T + 1j * zi.T).astype(jnp.complex64)

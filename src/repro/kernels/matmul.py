@@ -1,0 +1,128 @@
+"""Blocked MXU matmul — the cuBLAS-analogue shelf entry.
+
+Grid (M/bm, N/bn, K/bk) with the K dimension innermost ("arbitrary"
+semantics) so the f32 accumulator tile stays resident in VMEM across the
+contraction.  Block shapes default to 128x128x128: MXU-aligned (128 lanes,
+8-sublane f32 tiles) and small enough that a (bm,bk)+(bk,bn)+(bm,bn) working
+set (~192 KiB at f32) fits VMEM (~16 MiB) with ample double-buffering room.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul_pallas(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {k} vs {k2}")
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"shapes ({m},{k})x({k},{n}) must tile by "
+            f"({block_m},{block_n},{block_k}); pad first (interface adapter "
+            "handles this)"
+        )
+    grid = (m // block_m, n // block_n, k // block_k)
+    out_dtype = jnp.promote_types(a.dtype, b.dtype)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(a, b)
+
+
+def _schur_kernel(c_ref, a_ref, b_ref, o_ref, acc_ref, *, k_steps: int):
+    """o = c - a @ b (the LU trailing update), fused accumulate."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = c_ref[...].astype(jnp.float32)
+
+    acc_ref[...] -= jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def schur_update_pallas(
+    c: jax.Array,
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused C - A@B.  Saves one HBM round trip of C versus matmul-then-sub —
+    this is why LU registers its own shelf kernel instead of reusing matmul."""
+    m, k = a.shape
+    _, n = b.shape
+    if c.shape != (m, n):
+        raise ValueError(f"c shape {c.shape} != ({m},{n})")
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError("shapes must tile by the block sizes; pad first")
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_schur_kernel, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), c.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(c, a, b)

@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every shelf kernel.
+
+Each function is the semantic ground truth its Pallas kernel is tested
+against (tests/test_kernels_*.py sweep shapes and dtypes with
+``interpret=True`` and assert allclose against these).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.promote_types(a.dtype, b.dtype))
+
+
+def schur_update_ref(c: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    return c - a @ b
+
+
+def fft2d_ref(x: jax.Array) -> jax.Array:
+    return jnp.fft.fft2(x).astype(jnp.complex64)
+
+
+# "full": the whole norm in f32 (default).  "mixed": only the mean-square
+# reduction runs in f32; the scale multiply stays in the input dtype, so no
+# f32 (B,S,D) intermediate ever exists — sequence-parallel transitions and
+# remat traffic then move bf16 tensors instead of f32 (a §Perf knob).
+RMSNORM_PRECISION = "full"
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    if RMSNORM_PRECISION == "mixed" and x.dtype != jnp.float32:
+        ms = jnp.mean(
+            jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True
+        )
+        scale = jax.lax.rsqrt(ms + eps).astype(x.dtype)
+        return x * scale * w.astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(
+    q: jax.Array,  # (B, H, Sq, D)
+    k: jax.Array,  # (B, KH, Skv, D)
+    v: jax.Array,
+    causal: bool = True,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    _, kh, skv, _ = k.shape
+    group = h // kh
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32)
+    ) / (d ** 0.5)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + (skv - sq)  # align ends (kv prefix)
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(qi >= ki, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def lu_ref(a: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """LAPACK-style getrf oracle from jax.scipy."""
+    import jax.scipy.linalg as jsl
+
+    lu, piv = jsl.lu_factor(a)
+    return lu, piv
+
+
+def lu_reconstruct(lu: jax.Array, piv: jax.Array) -> jax.Array:
+    """Rebuild P^-1 L U from a packed factorisation + NR/LAPACK pivots —
+    the pivot-invariant way to verify an LU."""
+    n = lu.shape[0]
+    l = jnp.tril(lu, -1) + jnp.eye(n, dtype=lu.dtype)
+    u = jnp.triu(lu)
+    a = l @ u
+    # undo row swaps in reverse order
+    def body(t, m):
+        j = n - 1 - t
+        i = piv[j]
+        rj = m[j]
+        ri = m[i]
+        return m.at[j].set(ri).at[i].set(rj)
+
+    return jax.lax.fori_loop(0, n, body, a)
+
+
+def ssd_ref(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    a: jax.Array,  # (H,) negative
+    bmat: jax.Array,  # (B, S, N)
+    cmat: jax.Array,  # (B, S, N)
+    h0: jax.Array | None = None,  # (B, H, N, P)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential selective-scan oracle:
+    h_t = exp(A dt_t) h_{t-1} + dt_t B_t x_t ;  y_t = C_t h_t.
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = bmat.astype(jnp.float32)
+    cf = cmat.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(hprev, t):
+        x_t = xf[:, t]  # (B, H, P)
+        dt_t = dtf[:, t]  # (B, H)
+        b_t = bf[:, t]  # (B, N)
+        c_t = cf[:, t]  # (B, N)
+        decay = jnp.exp(af[None, :] * dt_t)  # (B, H)
+        upd = jnp.einsum("bh,bn,bhp->bhnp", dt_t, b_t, x_t)
+        hnew = hprev * decay[..., None, None] + upd
+        y_t = jnp.einsum("bn,bhnp->bhp", c_t, hnew)
+        return hnew, y_t
+
+    hfinal, ys = jax.lax.scan(step, h0, jnp.arange(s))
+    y = jnp.moveaxis(ys, 0, 1)  # (B, S, H, P)
+    return y.astype(jnp.float32), hfinal

@@ -1,0 +1,11 @@
+"""Model zoo: unified decoder LM covering the 10 assigned architectures."""
+
+from repro.models import lm  # noqa: F401
+from repro.models.params import (  # noqa: F401
+    ParamMeta,
+    abstract_params,
+    count_params,
+    init_params,
+    param_bytes,
+    spec_tree,
+)

@@ -1,0 +1,455 @@
+"""Attention mixers: GQA (llama-style) and MLA (DeepSeek-V2), with KV caches.
+
+Three execution paths per mixer:
+  * train/prefill: full-sequence causal attention through the FunctionBlock
+    registry ("attention" block: ref = naive softmax einsum, xla = chunked
+    online-softmax (memory-safe at 32k+), pallas = flash kernel);
+  * decode: single-token attention over the cache — einsum-based, never
+    materialises repeated KV heads; MLA decodes in the *absorbed* form
+    (scores and values computed directly against the compressed latent
+    cache, the MLA serving trick).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import blocks
+from repro.models.layers import rmsnorm, rope, tp_out_einsum
+from repro.models.params import ParamMeta
+from repro.sharding.utils import constrain
+
+_NEG = -1e30
+
+
+# -- parameter metas -----------------------------------------------------------
+
+
+def attn_metas(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    if cfg.mla:
+        m = cfg.mla
+        h = cfg.n_heads
+        return {
+            "wq": ParamMeta(
+                (d, h * (m.qk_nope_head_dim + m.qk_rope_head_dim)),
+                ("embed", "heads"), dt,
+            ),
+            "w_dkv": ParamMeta((d, m.kv_lora_rank), ("embed", None), dt),
+            "kv_norm": ParamMeta((m.kv_lora_rank,), (None,), dt, init="ones"),
+            "w_uk": ParamMeta(
+                (m.kv_lora_rank, h * m.qk_nope_head_dim), (None, "heads"), dt
+            ),
+            "w_uv": ParamMeta(
+                (m.kv_lora_rank, h * m.v_head_dim), (None, "heads"), dt
+            ),
+            "w_kr": ParamMeta((d, m.qk_rope_head_dim), ("embed", None), dt),
+            "wo": ParamMeta((h * m.v_head_dim, d), ("heads", "embed"), dt),
+        }
+    return {
+        "wq": ParamMeta((d, cfg.n_heads * cfg.d_head), ("embed", "heads"), dt),
+        "wk": ParamMeta((d, cfg.n_kv_heads * cfg.d_head), ("embed", "kv_heads"), dt),
+        "wv": ParamMeta((d, cfg.n_kv_heads * cfg.d_head), ("embed", "kv_heads"), dt),
+        "wo": ParamMeta((cfg.n_heads * cfg.d_head, d), ("heads", "embed"), dt),
+    }
+
+
+def cache_metas(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+    """Per-layer KV cache metas (leading layer axis added by the LM)."""
+    ct = cfg.compute_dtype
+    if cfg.mla:
+        m = cfg.mla
+        return {
+            "c": ParamMeta(
+                (batch, max_len, m.kv_lora_rank),
+                ("act_batch", "cache_seq", None), ct, init="zeros",
+            ),
+            "kr": ParamMeta(
+                (batch, max_len, m.qk_rope_head_dim),
+                ("act_batch", "cache_seq", None), ct, init="zeros",
+            ),
+        }
+    return {
+        "k": ParamMeta(
+            (batch, cfg.n_kv_heads, max_len, cfg.d_head),
+            ("act_batch", "kv_heads_act", "cache_seq", None), ct, init="zeros",
+        ),
+        "v": ParamMeta(
+            (batch, cfg.n_kv_heads, max_len, cfg.d_head),
+            ("act_batch", "kv_heads_act", "cache_seq", None), ct, init="zeros",
+        ),
+    }
+
+
+# -- chunked full-sequence attention (the memory-safe XLA formulation) ---------
+#
+# Flash-attention forward AND backward in jnp, with *static* chunk loops:
+#   * naive autodiff through attention stacks the full S^2 probability
+#     matrix per layer — the custom_vjp recomputes probability blocks in the
+#     backward from the saved (q, k, v, out, lse) instead;
+#   * chunk iteration is a Python loop over statically-sliced blocks, NOT a
+#     lax.scan over dynamic slices: GSPMD cannot partition a dynamic slice
+#     whose sliced axis is sharded and falls back to fully replicating the
+#     operand (hundreds of GB at 128 heads x 4k seq).  Static slices keep
+#     every block sharded.
+# Chunk size adapts so there are at most 8 chunks per axis (<=64 blocks).
+
+
+import functools
+
+
+def _chunks(s: int, target: int = 1024, max_chunks: int = 8) -> int:
+    c = max(target, -(-s // max_chunks))
+    c = min(c, s)
+    while s % c:
+        c += 1
+    return c
+
+
+# precision of the attention score blocks: "f32" (default) or "bf16"
+# (halves the dominant HBM traffic of the XLA attention path; stats and
+# accumulation stay f32) — a dry-run hillclimb knob.
+CHUNKED_SCORES_DTYPE = "float32"
+
+
+def _p_block(qc_scaled, lsec, kcf, qpos, kpos, causal):
+    if CHUNKED_SCORES_DTYPE == "bfloat16":
+        s = jnp.einsum(
+            "bkgqd,bksd->bkgqs",
+            qc_scaled.astype(jnp.bfloat16),
+            kcf.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qc_scaled, kcf)
+    if causal:
+        mask = (qpos[:, None] >= kpos[None, :])[None, None, None]
+        s = jnp.where(mask, s, _NEG)
+    return s, jnp.exp(s - lsec[..., None])
+
+
+def _chunked_fwd_core(q, k, v, causal: bool, q_chunk: int, kv_chunk: int):
+    """Returns (out (B,KH,G,Sq,Dv) f32, lse (B,KH,G,Sq))."""
+    b, h, sq, dk = q.shape
+    _, kh, skv, dv = v.shape
+    g = h // kh
+    nq = sq // q_chunk
+    nk = skv // kv_chunk
+    scale = 1.0 / (dk ** 0.5)
+    qg = q.reshape(b, kh, g, sq, dk)
+    off = skv - sq  # align sequence ends (cached prefix)
+
+    outs = []
+    lses = []
+    for qi in range(nq):
+        qc = qg[:, :, :, qi * q_chunk : (qi + 1) * q_chunk, :]
+        qc = qc.astype(jnp.float32) * scale
+        qpos = off + qi * q_chunk + jnp.arange(q_chunk)
+        m_acc = jnp.full((b, kh, g, q_chunk), _NEG, jnp.float32)
+        l_acc = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        o_acc = jnp.zeros((b, kh, g, q_chunk, dv), jnp.float32)
+        for ki in range(nk):
+            if causal and ki * kv_chunk > off + (qi + 1) * q_chunk - 1:
+                continue  # block fully above the diagonal
+            kc = k[:, :, ki * kv_chunk : (ki + 1) * kv_chunk, :]
+            vc = v[:, :, ki * kv_chunk : (ki + 1) * kv_chunk, :]
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s, _ = _p_block(qc, jnp.zeros_like(m_acc), kc.astype(jnp.float32),
+                            qpos, kpos, causal)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_acc, m_cur)
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_acc - m_new)
+            l_acc = l_acc * alpha + jnp.sum(p, axis=-1)
+            o_acc = o_acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vc.astype(jnp.float32)
+            )
+            m_acc = m_new
+        l_safe = jnp.where(l_acc == 0.0, 1.0, l_acc)
+        outs.append(o_acc / l_safe[..., None])
+        lses.append(m_acc + jnp.log(l_safe))
+    out = jnp.concatenate(outs, axis=3) if nq > 1 else outs[0]
+    lse = jnp.concatenate(lses, axis=3) if nq > 1 else lses[0]
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _attention_chunked_core(q, k, v, causal, q_chunk, kv_chunk):
+    out, _ = _chunked_fwd_core(q, k, v, causal, q_chunk, kv_chunk)
+    b, h, sq, _ = q.shape
+    return out.reshape(b, h, sq, -1).astype(q.dtype)
+
+
+def _core_fwd(q, k, v, causal, q_chunk, kv_chunk):
+    out, lse = _chunked_fwd_core(q, k, v, causal, q_chunk, kv_chunk)
+    b, h, sq, _ = q.shape
+    res = (q, k, v, out, lse)
+    return out.reshape(b, h, sq, -1).astype(q.dtype), res
+
+
+def _core_bwd(causal, q_chunk, kv_chunk, res, do):
+    q, k, v, out, lse = res  # out/lse grouped (B,KH,G,Sq,*)
+    b, h, sq, dk = q.shape
+    _, kh, skv, dv = v.shape
+    g = h // kh
+    nq = sq // q_chunk
+    nk = skv // kv_chunk
+    scale = 1.0 / (dk ** 0.5)
+    qg = q.reshape(b, kh, g, sq, dk).astype(jnp.float32)
+    dog = do.reshape(b, kh, g, sq, dv).astype(jnp.float32)
+    off = skv - sq
+    dsum = jnp.sum(dog * out, axis=-1)  # (B,KH,G,Sq)
+
+    dq_parts = []
+    dk_parts = [jnp.zeros((b, kh, kv_chunk, dk), jnp.float32) for _ in range(nk)]
+    dv_parts = [jnp.zeros((b, kh, kv_chunk, dv), jnp.float32) for _ in range(nk)]
+    for qi in range(nq):
+        sl = slice(qi * q_chunk, (qi + 1) * q_chunk)
+        qc = qg[:, :, :, sl, :] * scale
+        doc = dog[:, :, :, sl, :]
+        lsec = lse[:, :, :, sl]
+        dsc = dsum[:, :, :, sl]
+        qpos = off + qi * q_chunk + jnp.arange(q_chunk)
+        dq_acc = jnp.zeros((b, kh, g, q_chunk, dk), jnp.float32)
+        for ki in range(nk):
+            if causal and ki * kv_chunk > off + (qi + 1) * q_chunk - 1:
+                continue
+            ksl = slice(ki * kv_chunk, (ki + 1) * kv_chunk)
+            kcf = k[:, :, ksl, :].astype(jnp.float32)
+            vcf = v[:, :, ksl, :].astype(jnp.float32)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            _, p = _p_block(qc, lsec, kcf, qpos, kpos, causal)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doc, vcf)
+            ds = p * (dp - dsc[..., None])
+            dq_acc = dq_acc + jnp.einsum("bkgqs,bksd->bkgqd", ds, kcf) * scale
+            dk_parts[ki] = dk_parts[ki] + jnp.einsum(
+                "bkgqs,bkgqd->bksd", ds, qc
+            )  # qc already carries the 1/sqrt(d) factor
+            dv_parts[ki] = dv_parts[ki] + jnp.einsum("bkgqs,bkgqd->bksd", p, doc)
+        dq_parts.append(dq_acc)
+
+    dq = (jnp.concatenate(dq_parts, axis=3) if nq > 1 else dq_parts[0])
+    dk_full = jnp.concatenate(dk_parts, axis=2) if nk > 1 else dk_parts[0]
+    dv_full = jnp.concatenate(dv_parts, axis=2) if nk > 1 else dv_parts[0]
+    return (
+        dq.reshape(b, h, sq, dk).astype(q.dtype),
+        dk_full.astype(k.dtype),
+        dv_full.astype(v.dtype),
+    )
+
+
+_attention_chunked_core.defvjp(_core_fwd, _core_bwd)
+
+
+def attention_chunked(
+    q: jax.Array,  # (B, H, Sq, Dk)
+    k: jax.Array,  # (B, KH, Skv, Dk)
+    v: jax.Array,  # (B, KH, Skv, Dv)
+    causal: bool = True,
+    q_chunk: int | None = None,
+    kv_chunk: int | None = None,
+) -> jax.Array:
+    sq = q.shape[2]
+    skv = k.shape[2]
+    q_chunk = q_chunk or _chunks(sq)
+    kv_chunk = kv_chunk or _chunks(skv)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    if sq % q_chunk or skv % kv_chunk:
+        raise ValueError("sequence lengths must tile by attention chunks")
+    return _attention_chunked_core(q, k, v, causal, q_chunk, kv_chunk)
+
+
+def _register_chunked() -> None:
+    from repro.core.blocks import registry
+
+    registry.register(
+        "attention", "xla", attention_chunked,
+        "chunked online-softmax attention (memory-safe at long context)",
+    )
+
+
+_register_chunked()
+
+
+# -- decode attention over a cache ----------------------------------------------
+
+
+def decode_attention_gqa(
+    q: jax.Array,  # (B, H, 1, D)
+    k_cache: jax.Array,  # (B, KH, Smax, D)
+    v_cache: jax.Array,
+    index: jax.Array,  # scalar: current position (new token at this slot)
+) -> jax.Array:
+    b, h, _, d = q.shape
+    _, kh, smax, _ = k_cache.shape
+    g = h // kh
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32) / (d ** 0.5)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(smax)[None, None, None, :] <= index
+    s = jnp.where(valid, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, 1, d).astype(q.dtype)
+
+
+# -- the GQA mixer ----------------------------------------------------------------
+
+
+def gqa_forward(
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ArchConfig,
+    positions: jax.Array,  # (B, S)
+    cache: dict | None = None,
+    index: jax.Array | None = None,
+    mode: str = "train",
+):
+    b, s, d = x.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    h, kh, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,dq->bsq", xc, p["wq"].astype(cd)).reshape(b, s, h, dh)
+    k = jnp.einsum("bsd,dq->bsq", xc, p["wk"].astype(cd)).reshape(b, s, kh, dh)
+    v = jnp.einsum("bsd,dq->bsq", xc, p["wv"].astype(cd)).reshape(b, s, kh, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "act_batch", None, "heads_act", None)
+    k = constrain(k, "act_batch", None, "kv_heads_act", None)
+
+    qt = jnp.swapaxes(q, 1, 2)  # (B,H,S,dh)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    if mode == "decode":
+        assert cache is not None and index is not None
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], kt.astype(cache["k"].dtype), index, axis=2
+        )
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vt.astype(cache["v"].dtype), index, axis=2
+        )
+        o = decode_attention_gqa(qt, k_cache, v_cache, index)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        o = blocks.call("attention", qt, kt, vt, causal=True)
+        new_cache = None
+        if cache is not None:  # prefill: persist kv
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], kt.astype(cache["k"].dtype), 0, axis=2
+                ),
+                "v": jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], vt.astype(cache["v"].dtype), 0, axis=2
+                ),
+            }
+    o = jnp.swapaxes(o, 1, 2).reshape(b, s, h * dh)
+    o = constrain(o, "act_batch", None, "heads_act")
+    out = tp_out_einsum("bsq,qd->bsd", o.astype(cd), p["wo"].astype(cd), cd)
+    return out, new_cache
+
+
+# -- the MLA mixer -----------------------------------------------------------------
+
+
+def mla_forward(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    positions: jax.Array,
+    cache: dict | None = None,
+    index: jax.Array | None = None,
+    mode: str = "train",
+):
+    m = cfg.mla
+    b, s, d = x.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = jnp.einsum("bsd,dq->bsq", xc, p["wq"].astype(cd))
+    q = q.reshape(b, s, h, dn + dr)
+    qn, qr = q[..., :dn], q[..., dn:]
+    qr = rope(qr, positions, cfg.rope_theta)
+
+    c = jnp.einsum("bsd,dr->bsr", xc, p["w_dkv"].astype(cd))
+    c = rmsnorm(p["kv_norm"], c, cfg.norm_eps).astype(cd)
+    kr = jnp.einsum("bsd,dr->bsr", xc, p["w_kr"].astype(cd))
+    kr = rope(kr[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
+
+    if mode == "decode":
+        assert cache is not None and index is not None
+        c_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["c"], c.astype(cache["c"].dtype), index, axis=1
+        )
+        kr_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["kr"], kr[:, :, 0, :].astype(cache["kr"].dtype), index, axis=1
+        )
+        # absorbed decode: score = q_abs . c  +  qr . kr
+        w_uk = p["w_uk"].astype(cd).reshape(m.kv_lora_rank, h, dn)
+        q_abs = jnp.einsum("bshn,rhn->bshr", qn, w_uk)  # (B,1,H,r)
+        scale = 1.0 / ((dn + dr) ** 0.5)
+        s_nope = jnp.einsum(
+            "bshr,btr->bhst", q_abs.astype(jnp.float32),
+            c_cache.astype(jnp.float32),
+        )
+        s_rope = jnp.einsum(
+            "bshr,btr->bhst", qr.astype(jnp.float32),
+            kr_cache.astype(jnp.float32),
+        )
+        sc = (s_nope + s_rope) * scale  # (B,H,1,T)
+        smax = c_cache.shape[1]
+        valid = jnp.arange(smax)[None, None, None, :] <= index
+        sc = jnp.where(valid, sc, _NEG)
+        pattn = jax.nn.softmax(sc, axis=-1)
+        ctx = jnp.einsum(
+            "bhst,btr->bshr", pattn, c_cache.astype(jnp.float32)
+        )  # weighted latent
+        w_uv = p["w_uv"].astype(cd).reshape(m.kv_lora_rank, h, dv)
+        o = jnp.einsum("bshr,rhv->bshv", ctx.astype(cd), w_uv)
+        new_cache = {"c": c_cache, "kr": kr_cache}
+    else:
+        kn = jnp.einsum("bsr,rq->bsq", c, p["w_uk"].astype(cd))
+        kn = kn.reshape(b, s, h, dn)
+        v = jnp.einsum("bsr,rq->bsq", c, p["w_uv"].astype(cd))
+        v = v.reshape(b, s, h, dv)
+        k = jnp.concatenate([kn, jnp.broadcast_to(kr, (b, s, h, dr))], axis=-1)
+        qf = jnp.concatenate([qn, qr], axis=-1)
+        # pin head sharding: the broadcast of the shared rope key otherwise
+        # propagates "replicated heads" into the whole attention region and
+        # GSPMD all-gathers every (B,H,S,D) block — TBs/step at 128 heads
+        qf = constrain(qf, "act_batch", None, "heads_act", None)
+        k = constrain(k, "act_batch", None, "heads_act", None)
+        v = constrain(v, "act_batch", None, "heads_act", None)
+        o = blocks.call(
+            "attention",
+            jnp.swapaxes(qf, 1, 2),
+            jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2),
+            causal=True,
+        )
+        o = jnp.swapaxes(o, 1, 2)  # (B,S,H,dv)
+        new_cache = None
+        if cache is not None:
+            new_cache = {
+                "c": jax.lax.dynamic_update_slice_in_dim(
+                    cache["c"], c.astype(cache["c"].dtype), 0, axis=1
+                ),
+                "kr": jax.lax.dynamic_update_slice_in_dim(
+                    cache["kr"], kr[:, :, 0, :].astype(cache["kr"].dtype), 0,
+                    axis=1,
+                ),
+            }
+    o = o.reshape(b, s, h * dv)
+    out = tp_out_einsum("bsq,qd->bsd", o.astype(cd), p["wo"].astype(cd), cd)
+    return out, new_cache
+
+
+def attention_forward(p, x, cfg, positions, cache=None, index=None, mode="train"):
+    if cfg.mla is not None:
+        return mla_forward(p, x, cfg, positions, cache, index, mode)
+    return gqa_forward(p, x, cfg, positions, cache, index, mode)

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN: top-k routing with per-row capacity, index-based
+dispatch.
+
+Routing is computed per batch row (the GShard "group"): every row routes its
+S tokens into an (E, C) index table (C = S*top_k/E*capacity_factor), tokens
+beyond capacity are dropped (their index points at the out-of-range sentinel
+and the gather/scatter drop it).  Dispatch is a *gather* and combine is a
+*scatter-add* — no dense (tokens, E, C) one-hot tensor is ever materialised,
+which is what lets arctic-480b's 128-expert layers run at 1M tokens/step
+(a dense dispatch would be ~21 TB).
+
+Sharding: rows over "data", experts over "model"; the dispatch gather is
+row-local (no cross-device gather); the expert einsum aligns token shards
+with expert shards, which GSPMD lowers to the expected all-to-alls.
+
+Supports shared experts (DeepSeek: always-on) and a dense residual FFN in
+parallel (Arctic).  Aux loss is the Switch load-balancing loss.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import mlp_forward, mlp_metas, tp_out_einsum
+from repro.models.params import ParamMeta
+from repro.sharding.utils import constrain
+
+
+def moe_metas(cfg: ArchConfig) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    metas = {
+        "router": ParamMeta((d, m.n_experts), ("embed", None), dt, scale=0.02),
+        "w_gate": ParamMeta(
+            (m.n_experts, d, m.d_expert), ("experts", "expert_in", "expert_ffn"), dt
+        ),
+        "w_up": ParamMeta(
+            (m.n_experts, d, m.d_expert), ("experts", "expert_in", "expert_ffn"), dt
+        ),
+        "w_down": ParamMeta(
+            (m.n_experts, m.d_expert, d), ("experts", "expert_ffn", "expert_in"), dt
+        ),
+    }
+    if m.n_shared:
+        metas["shared"] = mlp_metas(d, m.d_expert * m.n_shared, dt)
+    if m.dense_residual:
+        metas["dense"] = mlp_metas(d, cfg.d_ff, dt)
+    return metas
+
+
+def capacity_of(seq: int, m: MoEConfig) -> int:
+    c = int(math.ceil(seq * m.top_k / m.n_experts * m.capacity_factor))
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def route_row(gates: jax.Array, top_k: int, capacity: int):
+    """Route one row of S tokens.  gates (S, E) f32.
+
+    Returns (idx (E, C) int32 — token id per expert slot, S = empty slot;
+             w (E, C) f32 — combine weight per slot;
+             frac (E,) — fraction of tokens dispatched per expert).
+    """
+    s, e = gates.shape
+    topv, topi = jax.lax.top_k(gates, top_k)  # (S, k)
+    topv = topv / (jnp.sum(topv, axis=-1, keepdims=True) + 1e-9)
+
+    idx_flat = jnp.full((e * capacity + 1,), s, dtype=jnp.int32)
+    w_flat = jnp.zeros((e * capacity + 1,), jnp.float32)
+    counts = jnp.zeros((e,), jnp.int32)
+    token_ids = jnp.arange(s, dtype=jnp.int32)
+    for slot in range(top_k):
+        eidx = topi[:, slot]  # (S,)
+        onehot = jax.nn.one_hot(eidx, e, dtype=jnp.int32)  # (S, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]  # (S, E)
+        counts = counts + jnp.sum(onehot, axis=0)
+        pos_tok = jnp.sum(pos * onehot, axis=-1)  # (S,)
+        keep = pos_tok < capacity
+        flat = jnp.where(keep, eidx * capacity + pos_tok, e * capacity)
+        idx_flat = idx_flat.at[flat].set(token_ids)
+        w_flat = w_flat.at[flat].set(topv[:, slot])
+
+    idx = idx_flat[: e * capacity].reshape(e, capacity)
+    w = w_flat[: e * capacity].reshape(e, capacity)
+    frac = jnp.minimum(counts, capacity).astype(jnp.float32) / max(s, 1)
+    return idx, w, frac
+
+
+def moe_forward(
+    p: dict, x: jax.Array, cfg: ArchConfig, compute_dtype
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss scalar)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xc = x.astype(compute_dtype)
+    logits = jnp.einsum(
+        "bsd,de->bse", xc.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    gates = jax.nn.softmax(logits, axis=-1)  # (B,S,E)
+    cap = capacity_of(s, m)
+
+    idx, w, frac = jax.vmap(lambda g: route_row(g, m.top_k, cap))(gates)
+    # idx, w: (B, E, C); row-local token ids (S = empty)
+
+    # dispatch: row-local gather
+    def gather_row(xr, ir):  # (S,D), (E,C) -> (E,C,D)
+        return jnp.take(xr, ir, axis=0, mode="fill", fill_value=0)
+
+    xin = jax.vmap(gather_row)(xc, idx)  # (B,E,C,D)
+    xin = constrain(xin, "act_batch", "experts_act", None, None)
+
+    g = jnp.einsum("becd,edf->becf", xin, p["w_gate"].astype(compute_dtype))
+    u = jnp.einsum("becd,edf->becf", xin, p["w_up"].astype(compute_dtype))
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "act_batch", "experts_act", None, None)
+    eo = tp_out_einsum("becf,efd->becd", h,
+                       p["w_down"].astype(compute_dtype), compute_dtype)
+    eo = eo * w[..., None].astype(compute_dtype)
+
+    # combine: row-local scatter-add (empty slots dropped)
+    def scatter_row(er, ir):  # (E,C,D), (E,C) -> (S,D)
+        out = jnp.zeros((s, d), er.dtype)
+        return out.at[ir.reshape(-1)].add(
+            er.reshape(-1, er.shape[-1]), mode="drop"
+        )
+
+    out = jax.vmap(scatter_row)(eo, idx)
+    out = constrain(out, "act_batch", None, None)
+
+    # Switch aux loss: E * sum_e f_e * mean_gate_e
+    mean_gate = jnp.mean(gates, axis=(0, 1))
+    aux = m.n_experts * jnp.sum(jnp.mean(frac, axis=0) * mean_gate)
+
+    if m.n_shared:
+        out = out + mlp_forward(p["shared"], xc, compute_dtype)
+    if m.dense_residual:
+        out = out + mlp_forward(p["dense"], xc, compute_dtype)
+    out = jax.ad_checkpoint.checkpoint_name(out, "moe_out")
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,159 @@
+"""Mamba-2 block (SSD): in_proj -> causal depthwise conv -> selective scan
+-> gated RMSNorm -> out_proj.
+
+The scan itself goes through the "ssd_scan" FunctionBlock (ref = sequential
+recurrence, xla = chunked SSD, pallas = chunked SSD with the Pallas
+intra-chunk kernel).  Decode keeps O(1) state per layer: the conv window
+(d_conv-1 last inputs) and the SSM state (H, N, P) — this is why SSM archs
+run the 500k-context shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import blocks
+from repro.models.params import ParamMeta
+from repro.models.layers import tp_out_einsum
+from repro.sharding.utils import constrain
+
+
+def ssm_metas(cfg: ArchConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    dt = cfg.param_dtype
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    cd = s.conv_dim(d)
+    d_in_proj = 2 * di + 2 * s.d_state + h  # z, xBC, dt
+    return {
+        "in_proj": ParamMeta((d, d_in_proj), ("embed", "ssm_inner"), dt),
+        "conv_w": ParamMeta((s.d_conv, cd), (None, "ssm_inner"), dt, scale=0.1),
+        "conv_b": ParamMeta((cd,), ("ssm_inner",), dt, init="zeros"),
+        "a_log": ParamMeta((h,), ("ssm_heads",), dt, init="ssm_a"),
+        "d_skip": ParamMeta((h,), ("ssm_heads",), dt, init="ones"),
+        "dt_bias": ParamMeta((h,), ("ssm_heads",), dt, init="dt_bias"),
+        "norm": ParamMeta((di,), ("ssm_inner",), dt, init="ones"),
+        "out_proj": ParamMeta((di, d), ("ssm_inner", "embed"), dt),
+    }
+
+
+def ssm_state_metas(cfg: ArchConfig, batch: int) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    h = s.n_heads(d)
+    return {
+        "conv": ParamMeta(
+            (batch, s.d_conv - 1, s.conv_dim(d)),
+            ("act_batch", None, "ssm_inner"), "float32", init="zeros",
+        ),
+        "ssm": ParamMeta(
+            (batch, h, s.d_state, s.head_dim),
+            ("act_batch", "ssm_heads_act", None, None), "float32", init="zeros",
+        ),
+    }
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over (B, S, C)."""
+    dconv, c = w.shape
+    out = jax.lax.conv_general_dilated(
+        xbc,
+        w.reshape(dconv, 1, c).astype(xbc.dtype),
+        window_strides=(1,),
+        padding=[(dconv - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return out + b.astype(xbc.dtype)
+
+
+def _split_zxbcdt(zxbcdt: jax.Array, cfg: ArchConfig):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    cd = s.conv_dim(cfg.d_model)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + cd]
+    dt = zxbcdt[..., di + cd :]
+    return z, xbc, dt
+
+
+def ssm_forward(
+    p: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: ArchConfig,
+    state: dict | None = None,
+    mode: str = "train",
+):
+    s = cfg.ssm
+    b, seq, d = x.shape
+    cdty = jnp.dtype(cfg.compute_dtype)
+    di = s.d_inner(d)
+    h = s.n_heads(d)
+    xc = x.astype(cdty)
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", xc, p["in_proj"].astype(cdty))
+    zxbcdt = constrain(zxbcdt, "act_batch", None, "ssm_inner_act")
+    z, xbc, dt_raw = _split_zxbcdt(zxbcdt, cfg)
+
+    if mode == "decode":
+        assert state is not None
+        window = jnp.concatenate([state["conv"].astype(cdty), xbc], axis=1)
+        conv_out = jnp.einsum(
+            "bwc,wc->bc", window, p["conv_w"].astype(cdty)
+        ) + p["conv_b"].astype(cdty)
+        conv_out = conv_out[:, None, :]
+        new_conv = window[:, 1:, :]
+    else:
+        conv_out = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+        new_conv = xbc[:, -(s.d_conv - 1) :, :] if state is not None else None
+    xbc_a = jax.nn.silu(conv_out)
+
+    x_ssm = xbc_a[..., :di].reshape(b, seq, h, s.head_dim)
+    bmat = xbc_a[..., di : di + s.d_state]
+    cmat = xbc_a[..., di + s.d_state :]
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+
+    if mode == "decode":
+        # one-step recurrence against the carried state
+        ssm_prev = state["ssm"].astype(jnp.float32)  # (B,H,N,P)
+        dt0 = dt[:, 0]  # (B,H)
+        decay = jnp.exp(a[None, :] * dt0)
+        upd = jnp.einsum(
+            "bh,bn,bhp->bhnp", dt0, bmat[:, 0].astype(jnp.float32),
+            x_ssm[:, 0].astype(jnp.float32),
+        )
+        ssm_new = ssm_prev * decay[..., None, None] + upd
+        y = jnp.einsum(
+            "bn,bhnp->bhp", cmat[:, 0].astype(jnp.float32), ssm_new
+        )[:, None]  # (B,1,H,P)
+        new_state = {"conv": new_conv.astype(state["conv"].dtype),
+                     "ssm": ssm_new.astype(state["ssm"].dtype)}
+    else:
+        h0 = state["ssm"].astype(jnp.float32) if state is not None else None
+        y, ssm_fin = blocks.call(
+            "ssd_scan", x_ssm, dt, a, bmat, cmat, chunk=s.chunk, h0=h0
+        )
+        new_state = None
+        if state is not None:
+            new_state = {
+                "conv": new_conv.astype(state["conv"].dtype),
+                "ssm": ssm_fin.astype(state["ssm"].dtype),
+            }
+
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * x_ssm.astype(
+        jnp.float32
+    )
+    y = y.reshape(b, seq, di)
+    # gated RMSNorm (Mamba-2): norm(y * silu(z)) * w
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(g * g, axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm"].astype(jnp.float32)
+    out = tp_out_einsum("bsk,kd->bsd", g.astype(cdty),
+                        p["out_proj"].astype(cdty), cdty)
+    return out, new_state

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, OptState  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.compression import compressed_psum_mean, quantize_tree  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.runtime.monitor import StepMonitor  # noqa: F401
+from repro.runtime.fault import FaultTolerantLoop, InjectedFailure  # noqa: F401

@@ -1,0 +1,11 @@
+from repro.sharding.utils import (  # noqa: F401
+    constrain,
+    current_mesh,
+    current_rules,
+    resolve_spec,
+    use_sharding,
+)
+from repro.sharding.specs import (  # noqa: F401
+    DEFAULT_RULES,
+    rules_for,
+)

@@ -1,0 +1,72 @@
+"""Logical-axis sharding context.
+
+Models annotate parameters and activations with *logical* axis names
+("vocab", "embed", "heads", "experts", "act_batch", ...).  A sharding
+context maps logical names to mesh axes; ``constrain`` applies
+``with_sharding_constraint`` when a context is active and is a no-op
+otherwise — so the same model code runs single-device (smoke tests),
+under the 256-chip pod mesh, and under the 512-chip multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Iterator, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> dict[str, Any]:
+    return getattr(_state, "rules", {})
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh | None, rules: Mapping[str, Any]) -> Iterator[None]:
+    prev = (current_mesh(), current_rules())
+    _state.mesh = mesh
+    _state.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def resolve_spec(
+    axes: Sequence[str | None], rules: Mapping[str, Any] | None = None
+) -> P:
+    """Map logical axis names to a PartitionSpec via the active rules."""
+    rules = current_rules() if rules is None else rules
+    mesh_axes = []
+    used: set[str] = set()
+    for ax in axes:
+        r = rules.get(ax) if ax is not None else None
+        if r is None:
+            mesh_axes.append(None)
+            continue
+        parts = (r,) if isinstance(r, str) else tuple(r)
+        parts = tuple(p for p in parts if p not in used)
+        used.update(parts)
+        if not parts:
+            mesh_axes.append(None)
+        elif len(parts) == 1:
+            mesh_axes.append(parts[0])
+        else:
+            mesh_axes.append(parts)
+    return P(*mesh_axes)
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Activation sharding constraint by logical axes; no-op without a mesh."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_spec(axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests run on the single host device (the dry-run sets its own flags in a
+# separate process).  Keep CPU feature parity deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,69 @@
+"""FunctionBlock registry: bindings scope the offload pattern."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401 registers blocks
+from repro.core import blocks
+from repro.core.engine import OffloadEngine
+
+
+def test_registry_has_shelf_blocks():
+    names = blocks.registry.blocks()
+    for expected in ("matmul", "attention", "rmsnorm", "ssd_scan", "fft2d", "lu"):
+        assert expected in names
+
+
+def test_default_binding_prefers_xla():
+    fn = blocks.registry.resolve("rmsnorm")
+    x = jnp.ones((2, 8))
+    w = jnp.ones(8)
+    out = fn(x, w)
+    assert out.shape == (2, 8)
+
+
+def test_bind_scopes_pattern():
+    calls = []
+
+    def probe(*a, **k):
+        calls.append("probe")
+        return a[0]
+
+    blocks.registry.register("rmsnorm", "probe_target", probe)
+    with blocks.bind({"rmsnorm": "probe_target"}):
+        blocks.call("rmsnorm", jnp.ones(4), jnp.ones(4))
+    assert calls == ["probe"]
+    # binding is restored outside the context
+    out = blocks.call("rmsnorm", jnp.ones((1, 4)), jnp.ones(4))
+    assert out.shape == (1, 4)
+
+
+def test_engine_environment_pattern_selection():
+    eng = OffloadEngine()
+    pat_cpu = eng.select_block_pattern("cpu")
+    assert pat_cpu["attention"] == "xla"
+    pat_tpu = eng.select_block_pattern("tpu")
+    assert pat_tpu["attention"] == "pallas"
+    assert pat_tpu["fft2d"] == "pallas"
+
+
+def test_measured_binding_selection():
+    eng = OffloadEngine()
+    x = jnp.ones((4, 64), jnp.float32)
+    w = jnp.ones(64, jnp.float32)
+
+    def builder():
+        def step(x, w):
+            return blocks.call("rmsnorm", x, w)
+
+        return step
+
+    best, results = eng.measure_block_pattern(
+        builder,
+        [{"rmsnorm": "ref"}, {"rmsnorm": "xla"}],
+        (x, w),
+        repeats=1,
+    )
+    assert best["rmsnorm"] in ("ref", "xla")
+    assert len(results) == 2

@@ -1,0 +1,51 @@
+"""Step-1 analysis (A-1/A-2): library-call detection, local defs, loops."""
+
+import pytest
+
+from repro.core import ast_analysis, default_db
+from repro.apps import fourier, matrix
+
+DB = default_db()
+
+
+def test_detects_library_call_by_name():
+    rep = ast_analysis.analyze_module_of(
+        fourier.fourier_app_libcall, DB.known_library_names
+    )
+    calls = [c for c in rep.library_calls if c.enclosing == "fourier_app_libcall"]
+    assert any(c.call_name == "fft2d_nr" for c in calls)
+
+
+def test_detects_dotted_library_call():
+    src = """
+import numpy as np
+def app(x):
+    return np.fft.fft2(x)
+"""
+    rep = ast_analysis.analyze_source(src, {"np.fft.fft2"})
+    assert [c.call_name for c in rep.library_calls] == ["np.fft.fft2"]
+
+
+def test_detects_local_defs_and_their_calls():
+    rep = ast_analysis.analyze_module_of(
+        fourier.fourier_app_copied, DB.known_library_names
+    )
+    defs = {d.name: d for d in rep.func_defs}
+    assert "my_fft2d" in defs
+    assert "my_fft1d" in defs["my_fft2d"].calls
+    assert defs["my_fft2d"].source.startswith("def my_fft2d")
+
+
+def test_detects_loops_with_nesting():
+    rep = ast_analysis.analyze_module_of(
+        matrix.ludcmp_nr, DB.known_library_names
+    )
+    loops = [l for l in rep.loops if l.enclosing == "ludcmp_nr"]
+    assert len(loops) >= 6  # NR ludcmp has many nested loops
+    assert max(l.depth for l in loops) >= 2
+
+
+def test_unknown_names_not_reported():
+    src = "def f(x):\n    return undefined_helper(x)\n"
+    rep = ast_analysis.analyze_source(src, DB.known_library_names)
+    assert rep.library_calls == []

@@ -1,0 +1,64 @@
+"""Synthetic data pipeline: determinism, sharding, learnability signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import SyntheticLMData, host_local_slice
+
+
+def test_deterministic_per_step():
+    d = SyntheticLMData(vocab_size=100, seq_len=16, global_batch=4, seed=3)
+    a = d.batch_at(7)
+    b = d.batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = d.batch_at(8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    d = SyntheticLMData(vocab_size=50, seq_len=8, global_batch=2)
+    b = d.batch_at(0)
+    # labels[t] is the next token after tokens[t] by construction
+    assert b["tokens"].shape == b["labels"].shape == (2, 8)
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_tokens_in_vocab_range():
+    d = SyntheticLMData(vocab_size=31, seq_len=64, global_batch=4)
+    b = d.batch_at(5)
+    for k in ("tokens", "labels"):
+        assert b[k].min() >= 0 and b[k].max() < 31
+
+
+@given(st.integers(1, 8))
+@settings(max_examples=8, deadline=None)
+def test_host_slices_partition_batch(n_hosts):
+    d = SyntheticLMData(vocab_size=100, seq_len=4, global_batch=8 * n_hosts)
+    b = d.batch_at(0)
+    slices = [host_local_slice(b, h, n_hosts) for h in range(n_hosts)]
+    rebuilt = np.concatenate([s["tokens"] for s in slices], axis=0)
+    np.testing.assert_array_equal(rebuilt, b["tokens"])
+
+
+def test_structure_is_learnable_signal():
+    # with structure=1.0 the recurrence is exact: next token predictable
+    d = SyntheticLMData(vocab_size=97, seq_len=32, global_batch=2, structure=1.0)
+    b = d.batch_at(0)
+    toks = np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1)
+    # infer (a, c) from the first two transitions and verify the rest
+    for row in toks:
+        ok = 0
+        for a in range(3, 23):
+            c = (row[1] - row[0] * a) % 97
+            if all((row[t - 1] * a + c) % 97 == row[t] for t in range(1, len(row))):
+                ok = 1
+                break
+        assert ok
+
+
+def test_embeds_batch_for_frontend_stub():
+    d = SyntheticLMData(vocab_size=100, seq_len=8, global_batch=2)
+    b = d.embeds_batch_at(0, d_model=16)
+    assert b["embeds"].shape == (2, 8, 16)
+    assert b["labels"].shape == (2, 8)

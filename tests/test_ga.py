@@ -1,0 +1,58 @@
+"""Prior-work GA loop-offload baseline (paper refs [32][33], Fig. 4)."""
+
+import numpy as np
+import pytest
+
+from repro.core.ga import run_ga
+from repro.apps import fourier, matrix
+
+
+def test_ga_on_fft_stages_improves():
+    x = fourier.make_input(64)  # power of two (radix-2 FFT)
+    rep = run_ga(
+        fourier.build_fft_variant,
+        n_genes=len(fourier.FFT_STAGES),
+        args=(x,),
+        population=6,
+        generations=4,
+        repeats=1,
+        seed=0,
+    )
+    assert rep.best_speedup > 1.5
+    # Fig. 4 property: best-of-generation is monotonically non-decreasing
+    # (elitism) and the history has one entry per generation
+    assert len(rep.generations) == 4
+    assert all(
+        b2 >= b1 * 0.98 for b1, b2 in zip(rep.generations, rep.generations[1:])
+    )
+
+
+def test_ga_caches_repeat_genomes():
+    x = fourier.make_input(32)
+    rep = run_ga(
+        fourier.build_fft_variant,
+        n_genes=len(fourier.FFT_STAGES),
+        args=(x,),
+        population=4,
+        generations=3,
+        repeats=1,
+        seed=1,
+    )
+    # evaluations must be well below pop*gens if the cache works
+    assert rep.evaluations <= 4 * 3 + 1
+
+
+def test_ga_genome_correctness_preserved():
+    x = fourier.make_input(32)
+    truth = np.fft.fft2(x)
+    for genome in [(0,) * 6, (1,) * 6, (1, 0, 1, 0, 1, 0)]:
+        out = fourier.build_fft_variant(genome)(x)
+        np.testing.assert_allclose(out, truth, rtol=1e-4, atol=1e-5)
+
+
+def test_lu_stage_variants_agree():
+    a = matrix.make_input(64)
+    det_truth = np.linalg.det(a)
+    for genome in [(0, 0, 0), (1, 1, 1), (0, 1, 0), (1, 0, 1)]:
+        det = float(matrix.build_lu_variant(genome)(a))
+        assert abs(det - det_truth) < 1e-2, genome

@@ -1,0 +1,123 @@
+"""Interface matching C-1/C-2: casts silent, semantic changes gated."""
+
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.interface import (
+    Adaptation,
+    InterfaceMismatch,
+    InterfaceSpec,
+    Param,
+    Policy,
+    match_interfaces,
+    pad_to,
+    spec_from_arrays,
+    unpad_from,
+)
+
+
+def _spec(*dtypes, returns=("float32",), optional_from=None):
+    params = tuple(
+        Param(f"a{i}", dt, optional=(optional_from is not None and i >= optional_from))
+        for i, dt in enumerate(dtypes)
+    )
+    return InterfaceSpec(params=params, returns=tuple(returns))
+
+
+def test_exact_match_is_c1():
+    a = match_interfaces(_spec("float32"), _spec("float32"))
+    assert a.exact and a.dropped == ()
+
+
+def test_cast_without_confirmation():
+    # paper: float/double casts proceed without asking the user
+    a = match_interfaces(_spec("float64"), _spec("float32"))
+    assert not a.exact
+    assert a.arg_casts[0] == (0, "float32")
+
+
+def test_optional_arg_dropped_silently():
+    src = _spec("float32", "float32", optional_from=1)
+    dst = _spec("float32")
+    a = match_interfaces(src, dst)
+    assert a.dropped == ("a1",)
+
+
+def test_required_mismatch_needs_confirmation():
+    src = _spec("float32", "float32")  # both required
+    dst = _spec("float32")
+    with pytest.raises(InterfaceMismatch):
+        match_interfaces(src, dst)
+
+
+def test_confirmation_callback_allows():
+    src = _spec("float32", "float32")
+    dst = _spec("float32")
+    msgs = []
+    pol = Policy(confirm=lambda m: msgs.append(m) or True)
+    a = match_interfaces(src, dst, pol)
+    assert a.confirmed and msgs
+
+
+def test_return_arity_mismatch_gated():
+    src = _spec("float32", returns=("float32", "int64", "float64"))
+    dst = _spec("float32", returns=("float32",))
+    with pytest.raises(InterfaceMismatch):
+        match_interfaces(src, dst)
+
+
+def test_wrap_applies_casts_and_unpads():
+    src = _spec("float64")
+    dst = InterfaceSpec(
+        params=(Param("x", "float32", align=4),), returns=("float32",)
+    )
+    a = match_interfaces(src, dst)
+
+    def impl(x):
+        assert x.dtype == np.float32
+        assert x.shape[-1] % 4 == 0
+        return x * 2.0
+
+    fn = a.wrap(impl)
+    out = fn(np.ones((3, 5), np.float64))
+    assert out.shape == (3, 5)
+    np.testing.assert_allclose(np.asarray(out), 2.0)
+
+
+def test_spec_from_arrays():
+    s = spec_from_arrays(
+        [np.zeros((2, 2), np.float64), np.int32(3)], [np.zeros(2, np.float32)]
+    )
+    assert s.params[0].dtype == "float64" and s.params[0].rank == 2
+    assert s.returns == ("float32",)
+
+
+# -- hypothesis properties -------------------------------------------------
+
+_dtypes = st.sampled_from(["float32", "float64", "bfloat16"])
+
+
+@given(st.lists(_dtypes, min_size=1, max_size=4))
+def test_identity_always_exact(dts):
+    spec = _spec(*dts)
+    a = match_interfaces(spec, spec)
+    assert a.exact
+
+
+@given(_dtypes, _dtypes)
+def test_float_casts_never_raise(src_dt, dst_dt):
+    a = match_interfaces(_spec(src_dt), _spec(dst_dt))
+    assert a.arg_casts[0][1] in (None, dst_dt)
+
+
+@given(
+    st.integers(1, 64), st.integers(1, 64),
+    st.sampled_from([1, 2, 4, 8, 128]),
+)
+def test_pad_unpad_roundtrip(n, m, align):
+    x = np.arange(n * m, dtype=np.float32).reshape(n, m)
+    padded = pad_to(x, align)
+    assert padded.shape[-1] % align == 0 and padded.shape[-2] % align == 0
+    back = unpad_from(padded, x.shape)
+    np.testing.assert_array_equal(back, x)

@@ -1,0 +1,81 @@
+"""Optimizer + schedule + compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamW
+from repro.optim.compression import _dequantize, _quantize, ef_update
+from repro.optim.schedule import warmup_cosine
+
+
+def test_adamw_optimizes_quadratic():
+    opt = AdamW(weight_decay=0.0, grad_clip=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0, 5.0])}
+    state = opt.init(params)
+    target = jnp.asarray([1.0, 1.0, 1.0])
+
+    @jax.jit
+    def step(params, state):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return opt.update(g, state, params, jnp.asarray(0.1))
+
+    for _ in range(200):
+        params, state = step(params, state)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+    assert int(state.step) == 200
+
+
+def test_adamw_bf16_moments():
+    opt = AdamW(moment_dtype="bfloat16")
+    params = {"w": jnp.ones(4)}
+    state = opt.init(params)
+    assert state.mu["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(4) * 0.5}
+    p2, s2 = opt.update(g, state, params, jnp.asarray(0.01))
+    assert s2.mu["w"].dtype == jnp.bfloat16
+    assert bool(jnp.all(jnp.isfinite(p2["w"])))
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    huge = {"w": jnp.asarray([1e6, -1e6, 1e6])}
+    p2, _ = opt.update(huge, state, params, jnp.asarray(0.001))
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 0.1
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(s, 1e-3, 10, 100)) for s in range(100)]
+    assert lrs[0] < lrs[9]  # warming up
+    assert abs(lrs[10] - 1e-3) < 1e-4  # peak ~ base lr
+    assert lrs[-1] < lrs[50] < lrs[11]  # decaying
+    assert lrs[-1] >= 1e-4 * 0.99  # floor at min_ratio
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal(1000) * 0.01, jnp.float32)
+    q, s = _quantize(g)
+    deq = _dequantize(q, s)
+    rel = float(jnp.linalg.norm(deq - g) / jnp.linalg.norm(g))
+    assert q.dtype == jnp.int8
+    assert rel < 0.01
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal(512) * 0.003, jnp.float32)
+    res = jnp.zeros_like(g)
+    acc_plain = jnp.zeros_like(g)
+    acc_ef = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s = _quantize(g)
+        acc_plain = acc_plain + _dequantize(q, s)
+        q2, s2, res = ef_update(g, res)
+        acc_ef = acc_ef + _dequantize(q2, s2)
+    err_plain = float(jnp.linalg.norm(acc_plain - 50 * g))
+    err_ef = float(jnp.linalg.norm(acc_ef - 50 * g))
+    assert err_ef <= err_plain + 1e-6

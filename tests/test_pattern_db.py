@@ -1,0 +1,52 @@
+"""Code-Pattern DB: registration, lookup, persistence."""
+
+import pytest
+
+from repro.core import CodePatternDB, ReplacementEntry, default_db
+
+
+def test_default_db_has_eval_targets():
+    db = default_db()
+    assert "fft2d" in db and "lu" in db
+    # the paper's targets resolve to callables
+    assert callable(db.get("fft2d").resolve())
+    assert callable(db.get("lu").resolve())
+
+
+def test_lookup_by_call_name_and_tail():
+    db = default_db()
+    assert db.lookup_by_call("fft2d_nr").name == "fft2d"
+    assert db.lookup_by_call("np.fft.fft2").name == "fft2d"
+    assert db.lookup_by_call("somelib.ludcmp").name == "lu"
+    assert db.lookup_by_call("nonexistent_fn") is None
+
+
+def test_roundtrip_json(tmp_path):
+    db = default_db()
+    p = tmp_path / "db.json"
+    db.save(p)
+    db2 = CodePatternDB.load(p)
+    assert len(db2) == len(db)
+    e1 = db.get("lu")
+    e2 = db2.get("lu")
+    assert e1.impl == e2.impl
+    assert e1.interface == e2.interface
+    assert e1.reference_code == e2.reference_code
+    assert db2.lookup_by_call("ludcmp").name == "lu"
+
+
+def test_register_custom_entry():
+    db = CodePatternDB()
+    db.register(
+        ReplacementEntry(
+            name="softmax",
+            source_names=("softmax", "scipy.special.softmax"),
+            impl="jax.nn:softmax",
+        )
+    )
+    assert db.lookup_by_call("scipy.special.softmax").name == "softmax"
+    fn = db.get("softmax").resolve()
+    import numpy as np
+
+    out = fn(np.zeros(4))
+    assert abs(float(out.sum()) - 1.0) < 1e-6

@@ -1,0 +1,104 @@
+"""Fault tolerance: failure injection + recovery, straggler detection."""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.fault import FaultTolerantLoop, InjectedFailure
+from repro.runtime.monitor import StepMonitor
+
+
+def _make_loop(tmp_path, fail_at=(), max_restarts=3, ckpt_every=5):
+    trace = []
+
+    def step_fn(state, batch, step):
+        trace.append(step)
+        return {"x": state["x"] + batch["v"]}
+
+    def batch_fn(step):
+        return {"v": np.float64(step)}  # deterministic replay
+
+    fails = {s: True for s in fail_at}
+
+    def failure_hook(step):
+        if fails.pop(step, False):
+            raise InjectedFailure(f"node lost at step {step}")
+
+    loop = FaultTolerantLoop(
+        step_fn=step_fn,
+        batch_fn=batch_fn,
+        ckpt=CheckpointManager(tmp_path),
+        ckpt_every=ckpt_every,
+        max_restarts=max_restarts,
+        failure_hook=failure_hook,
+    )
+    return loop, trace
+
+
+def _expected(n):
+    return float(sum(range(n)))
+
+
+def test_clean_run(tmp_path):
+    loop, _ = _make_loop(tmp_path)
+    res = loop.run({"x": 0.0}, 12)
+    assert res.completed_steps == 12
+    assert res.restarts == 0
+    assert float(res.state["x"]) == _expected(12)
+
+
+def test_recovery_is_bit_exact(tmp_path):
+    loop, trace = _make_loop(tmp_path, fail_at=(7,))
+    res = loop.run({"x": 0.0}, 12)
+    assert res.restarts == 1
+    # steps 5 and 6 replayed after restoring the step-5 checkpoint
+    assert trace.count(5) == 2 and trace.count(6) == 2
+    assert float(res.state["x"]) == _expected(12)
+
+
+def test_multiple_failures_within_budget(tmp_path):
+    loop, _ = _make_loop(tmp_path, fail_at=(3, 8, 11), max_restarts=5)
+    res = loop.run({"x": 0.0}, 15)
+    assert res.restarts == 3
+    assert float(res.state["x"]) == _expected(15)
+
+
+def test_restart_budget_exceeded_raises(tmp_path):
+    # failing the same un-checkpointed step forever must not loop silently
+    def always_fail(step):
+        if step == 2:
+            raise InjectedFailure("persistent fault")
+
+    loop, _ = _make_loop(tmp_path, max_restarts=2)
+    loop.failure_hook = always_fail
+    with pytest.raises(RuntimeError, match="restart budget"):
+        loop.run({"x": 0.0}, 10)
+
+
+def test_resume_from_existing_checkpoint(tmp_path):
+    loop1, _ = _make_loop(tmp_path)
+    loop1.run({"x": 0.0}, 10)
+    # a fresh process picks up at the last checkpoint, not step 0
+    loop2, trace2 = _make_loop(tmp_path)
+    res = loop2.run({"x": 0.0}, 15)
+    assert min(trace2) == 10
+    assert float(res.state["x"]) == _expected(15)
+
+
+def test_straggler_detection_flags_repeat_offender():
+    mon = StepMonitor(window=16, threshold=2.0, patience=2)
+    for step in range(20):
+        mon.observe(step, 0.1, host=0)
+    mon.observe(20, 0.5, host=3)
+    mon.observe(21, 0.6, host=3)
+    assert 3 in mon.flagged_hosts
+    assert len(mon.events) >= 2
+    assert mon.median_step() == pytest.approx(0.1, rel=0.2)
+
+
+def test_normal_jitter_not_flagged():
+    mon = StepMonitor(window=16, threshold=2.0, patience=2)
+    rng = np.random.default_rng(0)
+    for step in range(50):
+        mon.observe(step, 0.1 + 0.02 * rng.random(), host=0)
+    assert mon.flagged_hosts == set()

@@ -1,0 +1,68 @@
+"""Sharding rules: logical-axis resolution, dedupe, divisibility guards."""
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_shape
+from repro.sharding.specs import rules_for
+from repro.sharding.utils import resolve_spec
+
+MESH_1POD = {"data": 16, "model": 16}
+MESH_2POD = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_resolve_dedupes_reused_axes():
+    rules = {"a": "model", "b": "model", "c": ("data",)}
+    spec = resolve_spec(("a", "b", "c"), rules)
+    # "model" used once; second use dropped
+    assert spec == P("model", None, "data")
+
+
+def test_resolve_multi_axis():
+    rules = {"batch": ("pod", "data")}
+    assert resolve_spec(("batch", None), rules) == P(("pod", "data"), None)
+
+
+def test_train_rules_enable_fsdp_and_sp():
+    cfg = get_config("command-r-35b")
+    rules = rules_for(cfg, get_shape("train_4k"), MESH_1POD)
+    assert rules["embed"] == "data"  # FSDP
+    assert rules["act_seq"] == "model"  # sequence parallel
+    assert rules["act_batch"] == ("data",)
+
+
+def test_multipod_batch_uses_pod_axis():
+    cfg = get_config("llama3.2-1b")
+    rules = rules_for(cfg, get_shape("train_4k"), MESH_2POD)
+    assert rules["act_batch"] == ("pod", "data")
+    assert rules["embed"] == ("pod", "data")
+
+
+def test_kv_head_divisibility_guard():
+    cfg = get_config("granite-3-8b")  # kv=8 < 16-way model axis
+    rules = rules_for(cfg, get_shape("decode_32k"), MESH_1POD)
+    assert rules["kv_heads_act"] is None
+    assert rules["cache_seq"] == ("model",)
+
+
+def test_long_context_sequence_parallel():
+    cfg = get_config("mamba2-2.7b")
+    rules = rules_for(cfg, get_shape("long_500k"), MESH_1POD)
+    assert rules["act_batch"] is None  # batch 1 cannot shard
+    assert rules["act_seq"] == ("data",)
+
+
+def test_arctic_head_guard():
+    cfg = get_config("arctic-480b")  # 56 heads % 16 != 0
+    rules = rules_for(cfg, get_shape("train_4k"), MESH_1POD)
+    assert rules["heads_act"] is None
+    assert rules["experts_act"] == "model"  # 128 % 16 == 0
+
+
+def test_inference_fsdp_only_when_needed():
+    small = get_config("llama3.2-1b")
+    rules = rules_for(small, get_shape("decode_32k"), MESH_1POD)
+    assert rules["embed"] is None  # 1.2B fits TP-only
+    big = get_config("arctic-480b")
+    rules_big = rules_for(big, get_shape("decode_32k"), MESH_1POD)
+    assert rules_big["embed"] == "data"  # 480B needs ZeRO even to serve

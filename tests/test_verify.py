@@ -1,0 +1,97 @@
+"""Verification-environment pattern search (paper Step 3 procedure)."""
+
+import time
+
+import pytest
+
+from repro.core.verify import measure, search_offload_pattern, verify_numerics
+
+
+def _mk_variant_factory(costs):
+    """Variants whose runtime is a deterministic function of the subset."""
+
+    def build(subset):
+        seconds = costs[frozenset(subset)]
+
+        def fn(_x):
+            time.sleep(seconds)
+            return _x
+
+        return fn
+
+    return build
+
+
+def test_single_then_combine_adopts_combination():
+    costs = {
+        frozenset(): 0.02,
+        frozenset({"a"}): 0.012,
+        frozenset({"b"}): 0.014,
+        frozenset({"a", "b"}): 0.006,
+    }
+    rep = search_offload_pattern(
+        _mk_variant_factory(costs), ["a", "b"], (0,), repeats=1
+    )
+    assert set(rep.best.pattern) == {"a", "b"}
+    assert rep.best.speedup > 2.0
+
+
+def test_combination_rejected_when_slower_than_best_single():
+    costs = {
+        frozenset(): 0.02,
+        frozenset({"a"}): 0.008,
+        frozenset({"b"}): 0.018,
+        frozenset({"a", "b"}): 0.015,  # combo worse than 'a' alone
+    }
+    rep = search_offload_pattern(
+        _mk_variant_factory(costs), ["a", "b"], (0,), repeats=1
+    )
+    assert rep.best.pattern == ("a",)
+
+
+def test_keeps_baseline_when_nothing_helps():
+    costs = {
+        frozenset(): 0.005,
+        frozenset({"a"}): 0.02,
+    }
+    rep = search_offload_pattern(
+        _mk_variant_factory(costs), ["a"], (0,), repeats=1
+    )
+    assert rep.best.pattern == ()
+
+
+def test_prefilter_limits_trials():
+    costs = {
+        frozenset(): 0.01,
+        frozenset({"a"}): 0.005,
+        frozenset({"b"}): 0.005,
+    }
+    rep = search_offload_pattern(
+        _mk_variant_factory(costs), ["a", "b"], (0,), repeats=1,
+        prefilter=lambda name: name == "a",
+    )
+    assert {t.pattern for t in rep.trials} == {(), ("a",)}
+
+
+def test_measure_reports_compile_time_separately():
+    calls = {"n": 0}
+
+    def fn(x):
+        if calls["n"] == 0:
+            time.sleep(0.05)  # "compile" on first call
+        calls["n"] += 1
+        return x
+
+    m = measure(fn, (0,), repeats=2, warmup=1)
+    assert m.compile_seconds > 0.02
+    assert m.seconds < 0.05
+
+
+def test_verify_numerics_tuple_and_scalar():
+    f = lambda x: (x * 2.0, x + 1.0)
+    g = lambda x: (x * 2.0 + 1e-9, x + 1.0)
+    import numpy as np
+
+    assert verify_numerics(f, g, (np.ones(4),))
+    h = lambda x: (x * 3.0, x + 1.0)
+    assert not verify_numerics(f, h, (np.ones(4),))
