@@ -1,0 +1,17 @@
+PYTHON ?= python
+
+# Tier-1 verification (ROADMAP): the full suite, fail-fast.
+.PHONY: test
+test:
+	./scripts/test.sh full
+
+# Planner + core tests only — skips the slow kernel sweeps and end-to-end
+# system/arch tests.  This is what CI runs on every push.  The file list
+# lives in scripts/test.sh (single source of truth).
+.PHONY: test-fast
+test-fast:
+	./scripts/test.sh fast
+
+.PHONY: deps-dev
+deps-dev:
+	$(PYTHON) -m pip install -r requirements-dev.txt

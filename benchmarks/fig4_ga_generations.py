@@ -13,28 +13,25 @@ def run(n: int = 192, generations: int = 8, population: int = 8,
         seed: int = 0) -> list[float]:
     warnings.filterwarnings("ignore")
     from repro.apps import fourier
-    from repro.core import run_ga
+    from repro.core import planner
 
     x = fourier.make_input(n)
-    rep = run_ga(
-        fourier.build_fft_variant,
-        n_genes=len(fourier.FFT_STAGES),
-        args=(x,),
-        population=population,
-        generations=generations,
-        repeats=1,
-        seed=seed,
+    space = planner.SubsetSpace.from_genome_builder(
+        fourier.build_fft_variant, len(fourier.FFT_STAGES)
     )
-    for gen, speedup in enumerate(rep.generations):
+    rep = planner.GeneticSearch(
+        population=population, generations=generations, seed=seed
+    ).search(space, (x,), cache=planner.MeasurementCache(), repeats=1)
+    for gen, speedup in enumerate(rep.generations or []):
         emit(f"fig4.gen{gen}", rep.baseline_seconds / max(speedup, 1e-9),
              f"best_speedup={speedup:.2f}x")
     emit(
-        "fig4.final", rep.best_seconds,
-        f"best_speedup={rep.best_speedup:.2f}x genome="
-        f"{''.join(map(str, rep.best_genome))} evals={rep.evaluations} "
+        "fig4.final", rep.best.seconds,
+        f"best_speedup={rep.best.speedup:.2f}x genome="
+        f"{''.join(map(str, rep.best.candidate))} evals={rep.evaluations} "
         f"search={rep.search_seconds:.1f}s",
     )
-    return rep.generations
+    return list(rep.generations or [])
 
 
 def main() -> None:

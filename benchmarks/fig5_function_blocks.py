@@ -31,7 +31,14 @@ def run(n_fft: int = 256,  # must be a power of two (radix-2 FFT)
     import jax.numpy as jnp
 
     from repro.apps import fourier, matrix
-    from repro.core import OffloadEngine, run_ga
+    from repro.core import OffloadEngine, planner
+
+    def loop_ga(build_variant, n_genes, args, population, generations, seed=0):
+        """Prior-work loop-offload GA via the planner (binary genome)."""
+        space = planner.SubsetSpace.from_genome_builder(build_variant, n_genes)
+        return planner.GeneticSearch(
+            population=population, generations=generations, seed=seed
+        ).search(space, args, cache=planner.MeasurementCache(), repeats=1)
 
     eng = OffloadEngine()
     out: dict = {}
@@ -41,13 +48,13 @@ def run(n_fft: int = 256,  # must be a power of two (radix-2 FFT)
     t_cpu = time_call(fourier.fourier_app_libcall, (x,), repeats=repeats)
     emit(f"fig5.fft.cpu.n{n_fft}", t_cpu, "naive NR loops")
 
-    ga = run_ga(
-        fourier.build_fft_variant, n_genes=len(fourier.FFT_STAGES),
-        args=(x,), population=6, generations=4, repeats=1, seed=0,
+    ga = loop_ga(
+        fourier.build_fft_variant, len(fourier.FFT_STAGES), (x,),
+        population=6, generations=4,
     )
-    t_loop = ga.best_seconds
+    t_loop = ga.best.seconds
     emit(f"fig5.fft.loop.n{n_fft}", t_loop,
-         f"GA best genome={''.join(map(str, ga.best_genome))} "
+         f"GA best genome={''.join(map(str, ga.best.candidate))} "
          f"speedup={t_cpu/t_loop:.1f}x search={ga.search_seconds:.1f}s")
 
     res = eng.adapt(fourier.fourier_app_libcall, (x,), repeats=repeats)
@@ -66,13 +73,13 @@ def run(n_fft: int = 256,  # must be a power of two (radix-2 FFT)
     t_cpu = time_call(matrix.matrix_app_libcall, (a,), repeats=repeats)
     emit(f"fig5.lu.cpu.n{n_lu}", t_cpu, "naive NR ludcmp")
 
-    ga = run_ga(
-        matrix.build_lu_variant, n_genes=len(matrix.LU_STAGES),
-        args=(a,), population=5, generations=3, repeats=1, seed=0,
+    ga = loop_ga(
+        matrix.build_lu_variant, len(matrix.LU_STAGES), (a,),
+        population=5, generations=3,
     )
-    t_loop = ga.best_seconds
+    t_loop = ga.best.seconds
     emit(f"fig5.lu.loop.n{n_lu}", t_loop,
-         f"GA best genome={''.join(map(str, ga.best_genome))} "
+         f"GA best genome={''.join(map(str, ga.best.candidate))} "
          f"speedup={t_cpu/t_loop:.1f}x search={ga.search_seconds:.1f}s")
 
     res = eng.adapt(matrix.matrix_app_libcall, (a,), repeats=repeats)

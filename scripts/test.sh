@@ -1,0 +1,24 @@
+#!/usr/bin/env sh
+# Convenience wrapper around the Makefile targets for environments without
+# make.  Usage: scripts/test.sh [fast|full]
+set -eu
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+mode="${1:-full}"
+case "$mode" in
+  fast)
+    exec python -m pytest -q \
+      tests/test_planner.py tests/test_verify.py tests/test_ga.py \
+      tests/test_engine.py tests/test_blocks.py tests/test_core_ast.py \
+      tests/test_pattern_db.py tests/test_similarity.py \
+      tests/test_interface.py tests/test_hlo_cost.py
+    ;;
+  full)
+    exec python -m pytest -x -q
+    ;;
+  *)
+    echo "usage: scripts/test.sh [fast|full]" >&2
+    exit 2
+    ;;
+esac

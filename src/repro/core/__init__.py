@@ -5,10 +5,13 @@ Public API:
     CodePatternDB      the replacement registry (B-1/B-2)
     default_db         the stock DB with the TPU kernel shelf
     blocks             framework-native FunctionBlock registry
-    run_ga             prior-work loop-offload GA baseline
+    planner            unified pattern-search subsystem (spaces, strategies,
+                       MeasurementCache, persistent PlanStore)
+    run_ga             prior-work loop-offload GA baseline (shim over
+                       planner.GeneticSearch)
 """
 
-from repro.core import blocks  # noqa: F401
+from repro.core import blocks, planner  # noqa: F401
 from repro.core.engine import AdaptedApp, Discovery, OffloadEngine  # noqa: F401
 from repro.core.ga import GAReport, run_ga  # noqa: F401
 from repro.core.interface import (  # noqa: F401
@@ -17,6 +20,18 @@ from repro.core.interface import (  # noqa: F401
     Param,
     Policy,
     match_interfaces,
+)
+from repro.core.planner import (  # noqa: F401
+    BindingSpace,
+    CostGuidedSearch,
+    ExhaustiveSearch,
+    GeneticSearch,
+    MeasurementCache,
+    Plan,
+    Planner,
+    PlanStore,
+    SingleThenCombine,
+    SubsetSpace,
 )
 from repro.core.pattern_db import (  # noqa: F401
     CodePatternDB,

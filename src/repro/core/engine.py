@@ -8,14 +8,22 @@ Given a CPU application (a Python callable), the engine:
           Deckard-style similarity (B-2);
           interfaces are reconciled per C-1/C-2 (casts silently, semantic
           changes only with user confirmation);
-  Step 3  builds every candidate offload pattern by AST call-site
-          substitution, measures them in the verification environment with
-          the paper's single-then-combined procedure, checks numerics, and
-          returns the fastest verified variant.
+  Step 3  hands the discovered blocks to ``repro.core.planner``: candidate
+          offload patterns are a ``SubsetSpace`` (built by AST call-site
+          substitution) searched by a pluggable ``SearchStrategy`` —
+          ``SingleThenCombine`` (the paper's procedure) by default, the
+          prior-work ``GeneticSearch`` or the roofline-ranked
+          ``CostGuidedSearch`` on request — through a shared
+          ``MeasurementCache``.  The fastest pattern is numerics-checked
+          and returned.
 
 The engine also fronts the framework-native path: selecting function-block
-*bindings* (ref/xla/pallas) for the model zoo, either by measurement or by
-declared target environment (the dry-run/compile-only case).
+*bindings* (ref/xla/pallas) for the model zoo.  Those paths are thin
+wrappers over the same planner: ``measure_block_pattern`` is an
+``ExhaustiveSearch`` over a ``BindingSpace``, ``select_block_pattern`` is
+``planner.declared_pattern`` (the dry-run/compile-only case), and winning
+plans can be persisted via ``planner.PlanStore`` for zero-search startup
+in ``launch/serve.py`` / ``launch/train.py``.
 """
 
 from __future__ import annotations
@@ -26,7 +34,7 @@ from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
-from repro.core import ast_analysis, similarity, substitute, verify
+from repro.core import ast_analysis, planner, similarity, substitute, verify
 from repro.core.blocks import registry as block_registry
 from repro.core.interface import (
     Adaptation,
@@ -199,6 +207,8 @@ class OffloadEngine:
         example_args: Sequence[Any],
         repeats: int = 3,
         verify_rtol: float = 1e-3,
+        strategy: "planner.SearchStrategy | None" = None,
+        cache: "planner.MeasurementCache | None" = None,
     ) -> AdaptedApp:
         module = inspect.getmodule(app_fn)
         if module is None:  # pragma: no cover
@@ -260,12 +270,19 @@ class OffloadEngine:
             ns = substitute.rewrite_calls(module_src, mapping)
             return substitute.extract_function(ns, app_fn.__name__)
 
-        vreport = verify.search_offload_pattern(
+        space = planner.SubsetSpace(
             build_variant,
             [d.entry.name for d in active],
+            tag=f"{app_fn.__module__}.{app_fn.__qualname__}",
+        )
+        search = strategy or planner.SingleThenCombine()
+        report = search.search(
+            space,
             example_args,
+            cache=planner.MeasurementCache() if cache is None else cache,
             repeats=repeats,
         )
+        vreport = planner.to_verification_report(report)
         best_fn = build_variant(frozenset(vreport.best.pattern))
         numerics_ok = verify.verify_numerics(
             app_fn, best_fn, example_args, rtol=verify_rtol, atol=verify_rtol
@@ -283,22 +300,11 @@ class OffloadEngine:
     def select_block_pattern(
         self, environment: str, blocks: Sequence[str] | None = None
     ) -> dict[str, str]:
-        """Declared-environment binding selection (the dry-run case).
-
-        environment: "cpu" -> prefer XLA formulations; "tpu" -> prefer the
-        Pallas shelf where registered.
-        """
-        pattern: dict[str, str] = {}
-        names = blocks if blocks is not None else block_registry.blocks()
-        for b in names:
-            targets = block_registry.targets(b)
-            if environment == "tpu" and "pallas" in targets:
-                pattern[b] = "pallas"
-            elif "xla" in targets:
-                pattern[b] = "xla"
-            elif targets:
-                pattern[b] = targets[0]
-        return pattern
+        """Declared-environment binding selection (the dry-run case) — thin
+        wrapper over ``planner.declared_pattern``."""
+        return planner.declared_pattern(
+            environment, blocks=blocks, registry=block_registry
+        )
 
     def measure_block_pattern(
         self,
@@ -306,14 +312,28 @@ class OffloadEngine:
         patterns: Sequence[Mapping[str, str]],
         args: Sequence[Any],
         repeats: int = 3,
+        cache: "planner.MeasurementCache | None" = None,
+        min_seconds: float = 0.0,
     ) -> tuple[dict[str, str], list[tuple[dict[str, str], float]]]:
-        """Measured binding selection (verification-environment case):
-        re-trace the step under each candidate pattern and time it."""
-        results: list[tuple[dict[str, str], float]] = []
-        for pat in patterns:
-            with block_registry.bind(dict(pat)):
-                fn = step_builder()
-                m = verify.measure(fn, args, repeats=repeats)
-            results.append((dict(pat), m.seconds))
+        """Measured binding selection (verification-environment case) — an
+        ``ExhaustiveSearch`` over a ``BindingSpace`` restricted to the listed
+        patterns, re-tracing the step under each candidate binding."""
+        space = planner.BindingSpace.from_patterns(
+            step_builder, patterns, registry=block_registry
+        )
+        cands = [space.candidate_from_mapping(dict(p)) for p in patterns]
+        report = planner.ExhaustiveSearch(
+            candidates=cands, include_baseline=False
+        ).search(
+            space,
+            args,
+            cache=planner.MeasurementCache() if cache is None else cache,
+            repeats=repeats,
+            min_seconds=min_seconds,
+        )
+        by_key = {t.candidate: t.seconds for t in report.trials}
+        results = [
+            (dict(pat), by_key[cand]) for pat, cand in zip(patterns, cands)
+        ]
         best = min(results, key=lambda r: r[1])[0]
         return best, results

@@ -1,26 +1,26 @@
-"""Prior-work loop-offload GA (paper §3.2, refs [32][33]) — the comparison
-baseline for function-block offloading.
+"""Prior-work loop-offload GA (paper §3.2, refs [32][33]) — deprecated shim.
 
-Genome: one bit per parallelisable loop — 1 = offload (execute the loop's
-accelerated/vectorised variant on the device), 0 = keep on the CPU
-(interpreted).  Fitness = measured runtime of the variant in the verification
-environment.  Elitist generational GA with tournament selection, single-point
-crossover and per-bit mutation, plus a fitness cache so re-visited genomes
-are not re-measured (the measured trial is the expensive step — on real
-hardware each trial is a compile+run).
+The GA itself now lives in ``repro.core.planner.GeneticSearch``, which runs
+the same elitist generational algorithm (tournament selection, single-point
+crossover, per-gene mutation) over *any* ``SearchSpace`` — binary genomes on
+a ``SubsetSpace`` (this module's historical behaviour: one bit per
+parallelisable loop, 1 = offload) and n-ary genomes on a ``BindingSpace``
+(per-block choice among {ref, xla, pallas} targets, the paper's
+GPU-vs-FPGA destination choice generalised).  Measurement memoisation moved
+from the private fitness dict into the shared ``planner.MeasurementCache``,
+so a GA and a single-then-combine search over the same space never
+re-measure each other's visited patterns.
 
-``run_ga`` records the best measured speedup of every generation, which is
-exactly the curve of the paper's Fig. 4.
+``run_ga`` is kept as a thin wrapper producing the historical ``GAReport``
+(per-generation best speedup = the paper's Fig. 4 curve); new code should
+drive the planner directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import random
 import time
 from typing import Any, Callable, Sequence
-
-from repro.core.verify import measure
 
 Genome = tuple[int, ...]
 
@@ -51,58 +51,27 @@ def run_ga(
     repeats: int = 2,
     seed: int = 0,
 ) -> GAReport:
-    rng = random.Random(seed)
+    """Deprecated shim over ``planner.GeneticSearch`` on a binary space."""
+    from repro.core import planner
+
+    space = planner.SubsetSpace.from_genome_builder(build_variant, n_genes)
+    strategy = planner.GeneticSearch(
+        population=population,
+        generations=generations,
+        mutation_rate=mutation_rate,
+        elite=elite,
+        tournament=tournament,
+        seed=seed,
+    )
     t0 = time.perf_counter()
-
-    base = measure(build_variant(tuple([0] * n_genes)), args, repeats=repeats)
-    cache: dict[Genome, float] = {tuple([0] * n_genes): base.seconds}
-    evaluations = 1
-
-    def fitness(g: Genome) -> float:
-        nonlocal evaluations
-        if g not in cache:
-            m = measure(build_variant(g), args, repeats=repeats)
-            cache[g] = m.seconds
-            evaluations += 1
-        return cache[g]
-
-    # initial population: random genomes (paper: random bit init over the
-    # parallelisable-loop set)
-    pop: list[Genome] = []
-    while len(pop) < population:
-        g = tuple(rng.randint(0, 1) for _ in range(n_genes))
-        if g not in pop:
-            pop.append(g)
-
-    history: list[float] = []
-    for _gen in range(generations):
-        scored = sorted(pop, key=fitness)
-        history.append(base.seconds / fitness(scored[0]))
-        nxt: list[Genome] = scored[:elite]
-        while len(nxt) < population:
-            # tournament selection
-            def pick() -> Genome:
-                cand = [pop[rng.randrange(len(pop))] for _ in range(tournament)]
-                return min(cand, key=fitness)
-
-            a, b = pick(), pick()
-            if n_genes > 1:
-                cut = rng.randrange(1, n_genes)
-                child = a[:cut] + b[cut:]
-            else:
-                child = a
-            child = tuple(
-                (1 - bit) if rng.random() < mutation_rate else bit for bit in child
-            )
-            nxt.append(child)
-        pop = nxt
-
-    best = min(cache, key=cache.get)  # type: ignore[arg-type]
+    report = strategy.search(
+        space, args, cache=planner.MeasurementCache(), repeats=repeats
+    )
     return GAReport(
-        best_genome=best,
-        best_seconds=cache[best],
-        baseline_seconds=base.seconds,
-        generations=history,
-        evaluations=evaluations,
+        best_genome=tuple(report.best.candidate),
+        best_seconds=report.best.seconds,
+        baseline_seconds=report.baseline_seconds,
+        generations=list(report.generations or []),
+        evaluations=report.evaluations,
         search_seconds=time.perf_counter() - t0,
     )

@@ -1,0 +1,61 @@
+"""Planner — the unified offload-pattern search subsystem.
+
+The paper's contribution is *measured search*: candidate offload patterns
+are built, run in a verification environment, and the fastest verified
+pattern wins.  Historically this repo implemented that idea three times —
+``verify.search_offload_pattern`` (single-then-combine over source
+substitutions), ``ga.run_ga`` (the prior-work loop GA) and
+``OffloadEngine.measure_block_pattern`` (a linear sweep over registry
+bindings) — each with its own measurement loop and cache.  This package
+factors the common structure into four pieces:
+
+  SearchSpace   *what* is being searched.  ``SubsetSpace`` is the paper's
+                binary offload-or-not choice per discovered block;
+                ``BindingSpace`` generalises the GPU-vs-FPGA destination
+                choice to an n-ary choice among registered targets
+                ({ref, xla, pallas}) per function block.
+  SearchStrategy  *how* the space is explored.  ``SingleThenCombine`` is the
+                paper's Step-3 procedure (§4.2); ``GeneticSearch`` is the
+                prior-work GA, now n-ary and space-agnostic;
+                ``CostGuidedSearch`` ranks candidates with the HLO roofline
+                model and measures only the top-k (the paper's "FPGA
+                compilation takes hours — narrow candidates first"
+                pre-filter); ``ExhaustiveSearch`` measures a listed set.
+  MeasurementCache  shared memoisation keyed by canonical pattern, so no
+                strategy ever re-measures a visited pattern.  Preserves the
+                compile-time / runtime split per trial (paper Fig. 4).
+  PlanStore     persistent JSON plans keyed by name + environment
+                fingerprint, so a production process (launch/serve.py,
+                launch/train.py) can load a previously verified plan and
+                bind it with zero search.
+
+``Planner`` ties them together: check the store, otherwise search, then
+persist the winner.
+"""
+
+from repro.core.planner.cache import MeasurementCache  # noqa: F401
+from repro.core.planner.cost import make_roofline_cost_fn, roofline_seconds  # noqa: F401
+from repro.core.planner.planner import Planner, declared_pattern  # noqa: F401
+from repro.core.planner.space import (  # noqa: F401
+    DEFAULT_TARGET,
+    Axis,
+    BindingSpace,
+    Candidate,
+    SearchSpace,
+    SubsetSpace,
+)
+from repro.core.planner.store import (  # noqa: F401
+    Plan,
+    PlanStore,
+    environment_fingerprint,
+)
+from repro.core.planner.strategies import (  # noqa: F401
+    CostGuidedSearch,
+    ExhaustiveSearch,
+    GeneticSearch,
+    PlanReport,
+    PlanTrial,
+    SearchStrategy,
+    SingleThenCombine,
+    to_verification_report,
+)

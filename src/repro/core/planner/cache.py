@@ -1,0 +1,100 @@
+"""MeasurementCache — shared memoisation of measured trials.
+
+On real hardware every trial is a compile+run (hours per FPGA candidate in
+the paper), so no strategy may re-measure a pattern another strategy — or an
+earlier generation — already visited.  Entries are keyed by the space
+signature plus the canonical (order-independent) pattern, and keep the
+compile-time / runtime split from ``verify.measure`` so search-time curves
+(paper Fig. 4) stay reconstructable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+from repro.core import verify
+from repro.core.planner.space import Candidate, SearchSpace
+
+
+@dataclasses.dataclass
+class CacheRecord:
+    key: tuple
+    measurement: verify.Measurement
+    hits: int = 0
+
+
+def args_fingerprint(args: Sequence[Any]) -> tuple:
+    """Cheap structural identity of a measured workload's arguments.
+
+    Arrays are keyed by shape+dtype (not contents — re-hashing a 2048^2
+    input per lookup would dwarf short measurements), scalars by value.
+    Together with the space signature (which carries the builder tag) this
+    keeps one application's timings from answering for another's.
+    """
+    parts = []
+    for a in args:
+        shape = getattr(a, "shape", None)
+        if shape is not None:
+            parts.append(("array", tuple(shape), str(getattr(a, "dtype", ""))))
+        elif isinstance(a, (bool, int, float, str, bytes, type(None))):
+            parts.append(("value", a))
+        else:
+            parts.append(("object", type(a).__name__))
+    return tuple(parts)
+
+
+class MeasurementCache:
+    def __init__(self) -> None:
+        self._data: dict[tuple, CacheRecord] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def key_for(
+        self, space: SearchSpace, cand: Candidate, args: Sequence[Any] = ()
+    ) -> tuple:
+        return (space.signature(), args_fingerprint(args), space.canonical(cand))
+
+    def lookup(
+        self, space: SearchSpace, cand: Candidate, args: Sequence[Any] = ()
+    ) -> verify.Measurement | None:
+        rec = self._data.get(self.key_for(space, cand, args))
+        return None if rec is None else rec.measurement
+
+    def measure(
+        self,
+        space: SearchSpace,
+        cand: Candidate,
+        args: Sequence[Any],
+        repeats: int = 3,
+        min_seconds: float = 0.0,
+        warmup: int = 1,
+    ) -> tuple[verify.Measurement, bool]:
+        """Measure a candidate, or return the cached measurement.
+
+        Returns ``(measurement, cached)`` where ``cached`` is True when no
+        new measurement was taken.  A hit replays the stored measurement
+        regardless of ``repeats``/``min_seconds`` — the first measurement
+        of a pattern wins.
+        """
+        key = self.key_for(space, cand, args)
+        rec = self._data.get(key)
+        if rec is not None:
+            rec.hits += 1
+            self.hits += 1
+            return rec.measurement, True
+        fn = space.build(cand)
+        m = verify.measure(
+            fn, args, repeats=repeats, warmup=warmup, min_seconds=min_seconds
+        )
+        self._data[key] = CacheRecord(key, m)
+        self.misses += 1
+        return m, False
+
+    @property
+    def evaluations(self) -> int:
+        """Number of actually-measured (non-cached) trials so far."""
+        return self.misses

@@ -1,0 +1,64 @@
+"""HLO roofline cost model as a search pre-filter.
+
+``launch/hlo_cost.py`` re-derives loop-aware FLOPs / HBM bytes from compiled
+HLO text; here those feed a roofline estimate (seconds lower-bounded by
+compute and by memory traffic) that ``CostGuidedSearch`` uses to rank
+candidates before any measurement — the paper's FPGA narrowing step, where
+estimating is cheap (one compile) and measuring is expensive.
+
+The peak numbers default to the TPU v5e hardware model used by the
+roofline benchmarks (``launch/mesh.HW``); only the *relative* ranking
+matters for candidate narrowing, so they need not match the machine the
+verification environment runs on.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+from repro.core.planner.space import Candidate, SearchSpace
+
+# TPU v5e, kept in sync with repro.launch.mesh.HW (not imported to keep the
+# planner importable without the launch stack).
+PEAK_FLOPS = 197e12  # per chip, bf16
+PEAK_HBM_BW = 819e9  # bytes/s per chip
+
+
+def roofline_seconds(
+    fn: Callable[..., Any],
+    args: Sequence[Any],
+    peak_flops: float = PEAK_FLOPS,
+    peak_hbm_bw: float = PEAK_HBM_BW,
+) -> float:
+    """Lower-bound runtime of a jax-traceable callable from its compiled HLO.
+
+    Raises whatever jax raises when ``fn`` cannot be traced/compiled —
+    CostGuidedSearch treats that as an unrankable candidate.
+    """
+    import jax
+
+    from repro.launch import hlo_cost
+
+    compiled = jax.jit(fn).lower(*args).compile()
+    c = hlo_cost.analyze(compiled.as_text())
+    t_compute = c["flops"] / peak_flops
+    t_memory = c["hbm_bytes"] / peak_hbm_bw
+    return max(t_compute, t_memory, 1e-12)
+
+
+def make_roofline_cost_fn(
+    peak_flops: float = PEAK_FLOPS,
+    peak_hbm_bw: float = PEAK_HBM_BW,
+) -> Callable[[SearchSpace, Candidate, Sequence[Any]], float]:
+    """Cost function for CostGuidedSearch: build the candidate variant and
+    score it with the roofline model."""
+
+    def cost_fn(
+        space: SearchSpace, cand: Candidate, args: Sequence[Any]
+    ) -> float:
+        fn = space.build(cand)
+        return roofline_seconds(
+            fn, args, peak_flops=peak_flops, peak_hbm_bw=peak_hbm_bw
+        )
+
+    return cost_fn

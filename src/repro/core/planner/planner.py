@@ -1,0 +1,103 @@
+"""Planner — store-first search orchestration.
+
+``Planner.plan`` is the one entry point every search path routes through:
+check the PlanStore for a previously verified plan (zero measurements on
+hit), otherwise run the configured SearchStrategy over the SearchSpace via
+the shared MeasurementCache, persist the winner, and return it.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+from repro.core.planner.cache import MeasurementCache
+from repro.core.planner.space import SearchSpace
+from repro.core.planner.store import Plan, PlanStore, plan_from_report
+from repro.core.planner.strategies import (
+    PlanReport,
+    SearchStrategy,
+    SingleThenCombine,
+)
+
+
+def declared_pattern(
+    environment: str,
+    blocks: Sequence[str] | None = None,
+    registry: Any = None,
+) -> dict[str, str]:
+    """Declared-environment binding selection (the dry-run case: no machine
+    to measure on, only a target environment declaration).
+
+    environment: "cpu" -> prefer XLA formulations; "tpu" -> prefer the
+    Pallas shelf where registered.
+    """
+    if registry is None:
+        from repro.core.blocks import registry as registry_mod
+
+        registry = registry_mod
+    pattern: dict[str, str] = {}
+    names = blocks if blocks is not None else registry.blocks()
+    for b in names:
+        targets = registry.targets(b)
+        if environment == "tpu" and "pallas" in targets:
+            pattern[b] = "pallas"
+        elif "xla" in targets:
+            pattern[b] = "xla"
+        elif targets:
+            pattern[b] = targets[0]
+    return pattern
+
+
+class Planner:
+    def __init__(
+        self,
+        space: SearchSpace,
+        strategy: SearchStrategy | None = None,
+        cache: MeasurementCache | None = None,
+        store: PlanStore | None = None,
+    ) -> None:
+        self.space = space
+        self.strategy = strategy or SingleThenCombine()
+        self.cache = MeasurementCache() if cache is None else cache
+        self.store = store
+
+    def _compatible(self, plan: Plan) -> bool:
+        """A stored plan is usable when every chosen (axis, target) still
+        exists in the current space."""
+        by_name = {a.name: a for a in self.space.axes}
+        for name, label in plan.mapping.items():
+            axis = by_name.get(name)
+            if axis is None or label not in axis.choices:
+                return False
+        return True
+
+    def plan(
+        self,
+        args: Sequence[Any],
+        key: str | None = None,
+        repeats: int = 3,
+        min_seconds: float = 0.0,
+        force_search: bool = False,
+    ) -> tuple[Plan, PlanReport | None]:
+        """Return ``(plan, report)``.
+
+        ``report`` is None when the plan came straight from the store —
+        the zero-measurement production path.
+        """
+        if self.store is not None and key is not None and not force_search:
+            cached = self.store.load(key)
+            if cached is not None and self._compatible(cached):
+                return cached, None
+        report = self.strategy.search(
+            self.space,
+            args,
+            cache=self.cache,
+            repeats=repeats,
+            min_seconds=min_seconds,
+        )
+        plan = plan_from_report(
+            key or self.space.signature(), self.space.signature(), report
+        )
+        if self.store is not None and key is not None:
+            self.store.save(plan)
+        return plan, report

@@ -1,0 +1,426 @@
+"""SearchStrategy implementations over any SearchSpace.
+
+All strategies measure through a shared ``MeasurementCache`` and produce a
+``PlanReport`` whose trials keep the compile/runtime split per candidate.
+
+  SingleThenCombine   the paper's §4.2 Step-3 procedure, generalised to
+                      n-ary axes: baseline, every (axis, choice) alone,
+                      then the combination of per-axis winners, adopted
+                      only if it beats the best single.
+  GeneticSearch       the prior-work loop-offload GA (paper §3.2, refs
+                      [32][33]), now working over arbitrary axis
+                      cardinalities (n-ary genome: gene = choice index).
+  CostGuidedSearch    rank candidates by a static cost model (HLO roofline
+                      by default) and measure only the top-k — the FPGA
+                      pre-filter the paper motivates with hours-long
+                      compilations.
+  ExhaustiveSearch    measure a listed (or fully enumerated) candidate set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import time
+import warnings
+from typing import Any, Callable, Iterable, Sequence
+
+from repro.core import verify
+from repro.core.planner.cache import MeasurementCache
+from repro.core.planner.space import Candidate, SearchSpace
+
+
+@dataclasses.dataclass
+class PlanTrial:
+    candidate: Candidate
+    pattern: tuple[str, ...]  # axes moved off baseline, sorted
+    mapping: dict[str, str]  # axis -> non-baseline choice label
+    seconds: float
+    compile_seconds: float
+    speedup: float  # vs the report's baseline
+    cached: bool  # satisfied from the MeasurementCache
+
+
+@dataclasses.dataclass
+class PlanReport:
+    # the measured baseline candidate; when a strategy skips the baseline
+    # (ExhaustiveSearch(include_baseline=False)), this is the first measured
+    # trial and all speedups are relative to that reference instead
+    baseline_seconds: float
+    trials: list[PlanTrial]
+    best: PlanTrial
+    search_seconds: float
+    evaluations: int  # newly measured (non-cached) trials
+    strategy: str
+    generations: list[float] | None = None  # GA: best speedup per generation
+
+    def trial(self, pattern: Iterable[str]) -> PlanTrial | None:
+        key = tuple(sorted(pattern))
+        for t in self.trials:
+            if t.pattern == key:
+                return t
+        return None
+
+
+def to_verification_report(report: PlanReport) -> verify.VerificationReport:
+    """Downgrade a PlanReport to the legacy ``verify.VerificationReport``."""
+    trials = [
+        verify.Trial(t.pattern, t.seconds, t.speedup) for t in report.trials
+    ]
+    best = verify.Trial(
+        report.best.pattern, report.best.seconds, report.best.speedup
+    )
+    return verify.VerificationReport(
+        baseline_seconds=report.baseline_seconds,
+        trials=trials,
+        best=best,
+        search_seconds=report.search_seconds,
+    )
+
+
+class SearchStrategy:
+    name = "base"
+
+    def search(
+        self,
+        space: SearchSpace,
+        args: Sequence[Any],
+        cache: MeasurementCache | None = None,
+        repeats: int = 3,
+        min_seconds: float = 0.0,
+    ) -> PlanReport:
+        raise NotImplementedError
+
+
+class _Run:
+    """Bookkeeping shared by the concrete strategies: measure via the cache,
+    collect unique trials, track baseline and evaluation counts."""
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        args: Sequence[Any],
+        cache: MeasurementCache,
+        repeats: int,
+        min_seconds: float,
+    ) -> None:
+        self.space = space
+        self.args = args
+        self.cache = cache
+        self.repeats = repeats
+        self.min_seconds = min_seconds
+        self.t0 = time.perf_counter()
+        self.misses0 = cache.misses
+        self.trials: list[PlanTrial] = []
+        self._seen: dict[tuple, PlanTrial] = {}
+        self.baseline_seconds: float | None = None
+
+    def measure(self, cand: Candidate) -> PlanTrial:
+        key = self.cache.key_for(self.space, cand, self.args)
+        if key in self._seen:
+            return self._seen[key]
+        m, cached = self.cache.measure(
+            self.space,
+            cand,
+            self.args,
+            repeats=self.repeats,
+            min_seconds=self.min_seconds,
+        )
+        base = self.baseline_seconds
+        trial = PlanTrial(
+            candidate=tuple(cand),
+            pattern=self.space.pattern(cand),
+            mapping=self.space.mapping_of(cand),
+            seconds=m.seconds,
+            compile_seconds=m.compile_seconds,
+            speedup=(base / m.seconds) if base else 1.0,
+            cached=cached,
+        )
+        if base is None:
+            self.baseline_seconds = m.seconds
+            trial.speedup = 1.0
+        self._seen[key] = trial
+        self.trials.append(trial)
+        return trial
+
+    def seconds_of(self, cand: Candidate) -> float:
+        return self.measure(cand).seconds
+
+    def report(self, strategy: str, generations: list[float] | None = None) -> PlanReport:
+        best = min(self.trials, key=lambda t: t.seconds)
+        base = self.baseline_seconds or best.seconds
+        for t in self.trials:
+            t.speedup = base / t.seconds
+        return PlanReport(
+            baseline_seconds=base,
+            trials=self.trials,
+            best=best,
+            search_seconds=time.perf_counter() - self.t0,
+            evaluations=self.cache.misses - self.misses0,
+            strategy=strategy,
+            generations=generations,
+        )
+
+
+class SingleThenCombine(SearchStrategy):
+    """Paper §4.2: measure each block offloaded alone, then the combination
+    of individually-improving blocks, adopting it only if it beats the best
+    single.  For n-ary axes, "alone" means each (axis, choice) pair alone,
+    and the combination takes each axis's best improving choice."""
+
+    name = "single_then_combine"
+
+    def search(
+        self,
+        space: SearchSpace,
+        args: Sequence[Any],
+        cache: MeasurementCache | None = None,
+        repeats: int = 3,
+        min_seconds: float = 0.0,
+    ) -> PlanReport:
+        cache = MeasurementCache() if cache is None else cache
+        run = _Run(space, args, cache, repeats, min_seconds)
+
+        baseline = space.baseline()
+        base_t = run.measure(baseline)
+
+        # best improving choice per axis, measured alone
+        winners: dict[int, int] = {}
+        for i, axis in enumerate(space.axes):
+            best_c: int | None = None
+            best_s = base_t.seconds
+            for c in range(1, len(axis.choices)):
+                cand = list(baseline)
+                cand[i] = c
+                t = run.measure(tuple(cand))
+                if t.seconds < best_s:
+                    best_s = t.seconds
+                    best_c = c
+            if best_c is not None:
+                winners[i] = best_c
+
+        if len(winners) >= 2:
+            combo = list(baseline)
+            for i, c in winners.items():
+                combo[i] = c
+            # paper: the combination is adopted only if faster than the best
+            # single pattern — run.report picks the global minimum, so a
+            # slower combination simply doesn't win
+            run.measure(tuple(combo))
+
+        return run.report(self.name)
+
+
+class GeneticSearch(SearchStrategy):
+    """Elitist generational GA with tournament selection, single-point
+    crossover and per-gene mutation (prior work, paper §3.2).  Genes index
+    into each axis's choice list, so the genome is binary on a SubsetSpace
+    and n-ary on a BindingSpace."""
+
+    name = "genetic"
+
+    def __init__(
+        self,
+        population: int = 8,
+        generations: int = 8,
+        mutation_rate: float = 0.1,
+        elite: int = 2,
+        tournament: int = 3,
+        seed: int = 0,
+    ) -> None:
+        self.population = population
+        self.generations = generations
+        self.mutation_rate = mutation_rate
+        self.elite = elite
+        self.tournament = tournament
+        self.seed = seed
+
+    def _mutate_gene(
+        self, rng: random.Random, axis_card: int, gene: int
+    ) -> int:
+        if axis_card <= 1:
+            return gene
+        if axis_card == 2:
+            return 1 - gene
+        other = rng.randrange(axis_card - 1)
+        return other + 1 if other >= gene else other
+
+    def search(
+        self,
+        space: SearchSpace,
+        args: Sequence[Any],
+        cache: MeasurementCache | None = None,
+        repeats: int = 3,
+        min_seconds: float = 0.0,
+    ) -> PlanReport:
+        cache = MeasurementCache() if cache is None else cache
+        run = _Run(space, args, cache, repeats, min_seconds)
+        rng = random.Random(self.seed)
+        cards = [len(a.choices) for a in space.axes]
+        n_genes = len(cards)
+
+        run.measure(space.baseline())
+        fitness = run.seconds_of
+
+        pop: list[Candidate] = []
+        guard = 0
+        while len(pop) < self.population and guard < self.population * 50:
+            g = tuple(rng.randrange(c) for c in cards)
+            if g not in pop:
+                pop.append(g)
+            guard += 1
+
+        history: list[float] = []
+        base = run.baseline_seconds or 1.0
+        for _gen in range(self.generations):
+            scored = sorted(pop, key=fitness)
+            history.append(base / fitness(scored[0]))
+            nxt: list[Candidate] = scored[: self.elite]
+            while len(nxt) < self.population:
+
+                def pick() -> Candidate:
+                    cand = [
+                        pop[rng.randrange(len(pop))]
+                        for _ in range(self.tournament)
+                    ]
+                    return min(cand, key=fitness)
+
+                a, b = pick(), pick()
+                if n_genes > 1:
+                    cut = rng.randrange(1, n_genes)
+                    child = a[:cut] + b[cut:]
+                else:
+                    child = a
+                child = tuple(
+                    self._mutate_gene(rng, card, gene)
+                    if rng.random() < self.mutation_rate
+                    else gene
+                    for card, gene in zip(cards, child)
+                )
+                nxt.append(child)
+            pop = nxt
+
+        return run.report(self.name, generations=history)
+
+
+class ExhaustiveSearch(SearchStrategy):
+    """Measure every candidate in a listed set (or the whole space).
+
+    With ``include_baseline=False`` the report's baseline (and therefore
+    every speedup) is the first listed candidate, not the space baseline —
+    fine for picking a winner, misleading if the report is persisted as a
+    Plan whose speedup readers take as "vs un-offloaded".
+    """
+
+    name = "exhaustive"
+
+    def __init__(
+        self,
+        candidates: Sequence[Candidate] | None = None,
+        include_baseline: bool = True,
+        max_enumeration: int = 4096,
+    ) -> None:
+        self.candidates = candidates
+        self.include_baseline = include_baseline
+        self.max_enumeration = max_enumeration
+
+    def search(
+        self,
+        space: SearchSpace,
+        args: Sequence[Any],
+        cache: MeasurementCache | None = None,
+        repeats: int = 3,
+        min_seconds: float = 0.0,
+    ) -> PlanReport:
+        cache = MeasurementCache() if cache is None else cache
+        run = _Run(space, args, cache, repeats, min_seconds)
+        if self.candidates is not None:
+            cands = list(self.candidates)
+        else:
+            if space.size() > self.max_enumeration:
+                raise ValueError(
+                    f"space has {space.size()} candidates; pass an explicit "
+                    f"candidate list or raise max_enumeration"
+                )
+            cands = list(space.enumerate())
+        if self.include_baseline:
+            run.measure(space.baseline())
+        for cand in cands:
+            run.measure(cand)
+        return run.report(self.name)
+
+
+class CostGuidedSearch(SearchStrategy):
+    """Rank candidates by a static cost model, measure only the top-k.
+
+    The paper motivates this for FPGA: a single candidate compilation takes
+    hours, so candidates are narrowed by arithmetic intensity *before* any
+    measurement.  ``cost_fn(space, candidate, args) -> estimated seconds``
+    defaults to the HLO roofline model (``planner.cost``), which requires
+    the built variants to be jax-traceable; candidates whose cost cannot be
+    estimated rank last, and if no candidate can be ranked the strategy
+    degrades to exhaustive measurement with a warning.
+    """
+
+    name = "cost_guided"
+
+    def __init__(
+        self,
+        top_k: int = 4,
+        cost_fn: Callable[[SearchSpace, Candidate, Sequence[Any]], float]
+        | None = None,
+        max_enumeration: int = 1024,
+    ) -> None:
+        self.top_k = top_k
+        self.cost_fn = cost_fn
+        self.max_enumeration = max_enumeration
+
+    def search(
+        self,
+        space: SearchSpace,
+        args: Sequence[Any],
+        cache: MeasurementCache | None = None,
+        repeats: int = 3,
+        min_seconds: float = 0.0,
+    ) -> PlanReport:
+        cache = MeasurementCache() if cache is None else cache
+        run = _Run(space, args, cache, repeats, min_seconds)
+
+        cost_fn = self.cost_fn
+        if cost_fn is None:
+            from repro.core.planner.cost import make_roofline_cost_fn
+
+            cost_fn = make_roofline_cost_fn()
+
+        if space.size() > self.max_enumeration:
+            raise ValueError(
+                f"space has {space.size()} candidates; CostGuidedSearch "
+                f"enumerates the space — raise max_enumeration or shrink it"
+            )
+        baseline = space.baseline()
+        ranked: list[tuple[float, Candidate]] = []
+        n_failed = 0
+        for cand in space.enumerate():
+            if cand == baseline:
+                continue
+            try:
+                est = float(cost_fn(space, cand, args))
+            except Exception:  # noqa: BLE001 — unrankable candidate
+                est = float("inf")
+                n_failed += 1
+            ranked.append((est, cand))
+        ranked.sort(key=lambda rc: rc[0])
+
+        run.measure(baseline)
+        if ranked and all(est == float("inf") for est, _ in ranked):
+            warnings.warn(
+                "CostGuidedSearch: cost model failed on every candidate; "
+                "falling back to exhaustive measurement",
+                stacklevel=2,
+            )
+            chosen = [cand for _, cand in ranked]
+        else:
+            chosen = [cand for _, cand in ranked[: max(self.top_k, 1)]]
+        for cand in chosen:
+            run.measure(cand)
+        return run.report(self.name)

@@ -1,30 +1,30 @@
-"""Verification environment (paper Step 3 / §4.2 pattern search).
+"""Verification-environment measurement primitives (paper Step 3).
 
 "Being registered as fast" does not guarantee speed in situ, so the paper
-measures.  Its procedure with k replaceable blocks:
+measures candidate patterns in a verification environment.  This module
+owns the *measurement* primitives:
 
-1. measure the unmodified application (baseline);
-2. measure each block offloaded *alone*;
-3. take the set of blocks that individually beat the baseline, measure the
-   combined pattern, and keep the combination only if it beats the best
-   single pattern;
-4. the fastest measured pattern is the solution.
+  ``measure``          device-blocking median-of-repeats timing with the
+                       compile (warm-up) time split out, and an optional
+                       ``min_seconds`` floor that re-runs short kernels
+                       until the timed window is long enough to be stable;
+  ``verify_numerics``  the functional check a winning pattern must pass
+                       before deployment.
 
-That procedure is implemented verbatim in ``search_offload_pattern``.  The
-FPGA-motivated pre-filter ("compilation takes hours, narrow candidates by
-arithmetic intensity first") maps to an optional cost-hint pre-filter.
-
-Measurements block on device results (``block_until_ready``) and use
-median-of-repeats, warming up once to exclude JIT compile time — compile time
-is reported separately because the paper reports search time (minutes vs
-hours for the GA) as a headline result.
+The pattern *search* itself lives in ``repro.core.planner``: the paper's
+single-then-combine procedure is ``planner.SingleThenCombine`` over a
+``planner.SubsetSpace``, the FPGA-motivated "narrow candidates before the
+hours-long compile" pre-filter is ``planner.CostGuidedSearch`` on the HLO
+roofline model, and all strategies share one ``planner.MeasurementCache``.
+``search_offload_pattern`` below is a deprecated shim kept for existing
+callers; new code should use the planner directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Iterable, Mapping, Sequence
+from typing import Any, Callable, Iterable, Sequence
 
 
 def _block(x: Any) -> None:
@@ -49,6 +49,10 @@ def measure(
     warmup: int = 1,
     min_seconds: float = 0.0,
 ) -> Measurement:
+    """Median seconds per call; ``min_seconds`` > 0 repeats each timed
+    window until it spans at least that much wall time (per-call time is
+    the window divided by the call count), which stabilises sub-millisecond
+    kernels whose single-call time is dominated by timer/dispatch noise."""
     t0 = time.perf_counter()
     for _ in range(max(warmup, 0)):
         _block(fn(*args))
@@ -56,8 +60,14 @@ def measure(
     times = []
     for _ in range(max(repeats, 1)):
         t0 = time.perf_counter()
-        _block(fn(*args))
-        times.append(time.perf_counter() - t0)
+        calls = 0
+        while True:
+            _block(fn(*args))
+            calls += 1
+            elapsed = time.perf_counter() - t0
+            if elapsed >= min_seconds:
+                break
+        times.append(elapsed / calls)
     times.sort()
     med = times[len(times) // 2]
     return Measurement(
@@ -96,46 +106,22 @@ def search_offload_pattern(
     repeats: int = 3,
     prefilter: Callable[[str], bool] | None = None,
 ) -> VerificationReport:
-    """Run the paper's single-then-combine measured search.
+    """Deprecated shim: the paper's single-then-combine measured search.
 
     ``build_variant(subset)`` must return a callable implementing the
     application with exactly ``subset`` blocks offloaded (empty set =
-    unmodified baseline).
+    unmodified baseline).  New code should use
+    ``planner.SingleThenCombine().search(planner.SubsetSpace(...), ...)``
+    directly — this wrapper survives only for source compatibility.
     """
+    from repro.core import planner
 
-    t_search0 = time.perf_counter()
-    candidates = [c for c in candidates if prefilter is None or prefilter(c)]
-
-    baseline_fn = build_variant(frozenset())
-    base = measure(baseline_fn, args, repeats=repeats)
-    trials: list[Trial] = [Trial((), base.seconds, 1.0)]
-
-    singles: list[Trial] = []
-    for name in candidates:
-        fn = build_variant(frozenset({name}))
-        m = measure(fn, args, repeats=repeats)
-        t = Trial((name,), m.seconds, base.seconds / m.seconds)
-        trials.append(t)
-        singles.append(t)
-
-    winners = [t for t in singles if t.speedup > 1.0]
-    best = min(trials, key=lambda t: t.seconds)
-    if len(winners) >= 2:
-        combo = frozenset(n for t in winners for n in t.pattern)
-        fn = build_variant(combo)
-        m = measure(fn, args, repeats=repeats)
-        t = Trial(tuple(sorted(combo)), m.seconds, base.seconds / m.seconds)
-        trials.append(t)
-        # paper: adopt the combination only if faster than the best single
-        if t.seconds < best.seconds:
-            best = t
-
-    return VerificationReport(
-        baseline_seconds=base.seconds,
-        trials=trials,
-        best=best,
-        search_seconds=time.perf_counter() - t_search0,
+    names = [c for c in candidates if prefilter is None or prefilter(c)]
+    space = planner.SubsetSpace(build_variant, names)
+    report = planner.SingleThenCombine().search(
+        space, args, cache=planner.MeasurementCache(), repeats=repeats
     )
+    return planner.to_verification_report(report)
 
 
 def verify_numerics(

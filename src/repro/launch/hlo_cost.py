@@ -146,9 +146,6 @@ class HloCostModel:
     def __init__(self, text: str) -> None:
         self.comps = parse_module(text)
         self._memo: dict[str, Cost] = {}
-        entry = None
-        for c in self.comps.values():
-            pass
         # entry = the computation named main*, else the last one
         names = list(self.comps)
         entry_candidates = [n for n in names if n.startswith("main")]

@@ -2,6 +2,12 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --batch 4 --prompt-len 64 --gen 32
+
+Production startup loads a previously verified offload plan (searched and
+saved by the planner in a verification environment) and binds it with zero
+re-measurement:
+
+  ... --plan-dir results/plans --plan-key serve:llama3.2-1b
 """
 
 from __future__ import annotations
@@ -14,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.plans import load_plan_bindings, plan_binding_context  # noqa: F401 — load_plan_bindings is re-exported API
 from repro.models import lm
 
 
@@ -25,6 +32,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--plan-dir", default=None,
+                    help="PlanStore directory with verified offload plans")
+    ap.add_argument("--plan-key", default=None,
+                    help="plan to load and bind at startup (zero search)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -37,26 +48,29 @@ def main() -> None:
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
     )
 
-    prefill = jax.jit(lambda p, b, c: lm.prefill(p, b, cfg, c))
-    decode = jax.jit(lambda p, t, c: lm.decode_step(p, t, cfg, c))
+    with plan_binding_context(args.plan_dir, args.plan_key):
+        prefill = jax.jit(lambda p, b, c: lm.prefill(p, b, cfg, c))
+        decode = jax.jit(lambda p, t, c: lm.decode_step(p, t, cfg, c))
 
-    cache = lm.init_cache(cfg, args.batch, max_len)
-    t0 = time.time()
-    logits, cache = prefill(params, {"tokens": prompts}, cache)
-    logits.block_until_ready()
-    t_prefill = time.time() - t0
+        cache = lm.init_cache(cfg, args.batch, max_len)
+        t0 = time.time()
+        logits, cache = prefill(params, {"tokens": prompts}, cache)
+        logits.block_until_ready()
+        t_prefill = time.time() - t0
 
-    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None].astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.time()
-    for _ in range(args.gen - 1):
-        logits, cache = decode(params, tok, cache)
-        tok = jnp.argmax(logits[:, 0, :cfg.vocab_size], axis=-1)[:, None].astype(
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None].astype(
             jnp.int32
         )
-        out_tokens.append(tok)
-    tok.block_until_ready()
-    t_dec = time.time() - t0
+        out_tokens = [tok]
+        t0 = time.time()
+        for _ in range(args.gen - 1):
+            logits, cache = decode(params, tok, cache)
+            tok = jnp.argmax(
+                logits[:, 0, :cfg.vocab_size], axis=-1
+            )[:, None].astype(jnp.int32)
+            out_tokens.append(tok)
+        tok.block_until_ready()
+        t_dec = time.time() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
     print(f"arch={cfg.name} batch={args.batch}")

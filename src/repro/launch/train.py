@@ -8,6 +8,10 @@ mesh via --mesh.
 
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
       --steps 100 --batch 8 --seq 128
+
+A previously verified offload plan (planner PlanStore) can be bound at
+startup with --plan-dir/--plan-key — the step is then traced under that
+block->target pattern with zero search or re-measurement.
 """
 
 from __future__ import annotations
@@ -77,6 +81,10 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--plan-dir", default=None,
+                    help="PlanStore directory with verified offload plans")
+    ap.add_argument("--plan-key", default=None,
+                    help="plan to load and bind at startup (zero search)")
     args = ap.parse_args()
 
     cfg, data, step_fn, params, opt_state = build(args)
@@ -107,8 +115,11 @@ def main() -> None:
         ckpt_every=args.ckpt_every,
         monitor=monitor,
     )
+    from repro.launch.plans import plan_binding_context
+
     t0 = time.time()
-    result = loop.run(state, args.steps)
+    with plan_binding_context(args.plan_dir, args.plan_key):
+        result = loop.run(state, args.steps)
     dt = time.time() - t0
     tokens = args.steps * args.batch * args.seq
     print(

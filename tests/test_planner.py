@@ -1,0 +1,412 @@
+"""Planner subsystem: spaces, strategies, shared cache, persistent plans.
+
+Timing-sensitive tests drive sleep-based variants with >=5 ms gaps between
+candidates so median-of-1 measurements rank them deterministically.
+"""
+
+import time
+import warnings
+
+import pytest
+
+from repro.core import blocks, planner
+from repro.core.blocks import FunctionBlockRegistry
+from repro.core.planner import (
+    BindingSpace,
+    CostGuidedSearch,
+    ExhaustiveSearch,
+    GeneticSearch,
+    MeasurementCache,
+    Plan,
+    Planner,
+    PlanStore,
+    SingleThenCombine,
+    SubsetSpace,
+)
+
+
+def sleep_subset_space(costs, names):
+    """SubsetSpace whose runtime is a deterministic function of the subset."""
+
+    def build(subset):
+        seconds = costs[frozenset(subset)]
+
+        def fn(_x):
+            time.sleep(seconds)
+            return _x
+
+        return fn
+
+    return SubsetSpace(build, names)
+
+
+COSTS3 = {
+    frozenset(): 0.040,
+    frozenset({"a"}): 0.025,
+    frozenset({"b"}): 0.030,
+    frozenset({"c"}): 0.050,
+    frozenset({"a", "b"}): 0.012,
+    frozenset({"a", "c"}): 0.030,
+    frozenset({"b", "c"}): 0.035,
+    frozenset({"a", "b", "c"}): 0.020,
+}
+
+
+# -- spaces -------------------------------------------------------------------
+
+
+def test_subset_space_structure():
+    sp = sleep_subset_space(COSTS3, ["a", "b", "c"])
+    assert sp.size() == 8
+    assert sp.baseline() == (0, 0, 0)
+    assert sp.pattern((1, 0, 1)) == ("a", "c")
+    assert sp.subset_of((0, 1, 0)) == frozenset({"b"})
+    assert sp.candidate_from_subset(frozenset({"a", "c"})) == (1, 0, 1)
+    # canonical keys are order-independent and distinct per pattern
+    assert len({sp.canonical(c) for c in sp.enumerate()}) == 8
+
+
+def test_binding_space_nary_axes_and_bind():
+    reg = FunctionBlockRegistry()
+    calls = []
+    for target, delay in [("ref", 0.02), ("xla", 0.004), ("pallas", 0.012)]:
+        def mk(t=target, d=delay):
+            def impl(x):
+                calls.append(t)
+                time.sleep(d)
+                return x
+
+            return impl
+
+        reg.register("norm", target, mk())
+
+    space = BindingSpace(lambda: (lambda x: reg.call("norm", x)),
+                         registry=reg)
+    assert [a.name for a in space.axes] == ["norm"]
+    # ref is the baseline (choice 0), generalising "not offloaded"
+    assert space.axes[0].choices[0] == "ref"
+    assert space.size() == 3
+
+    cand = space.candidate_from_mapping({"norm": "pallas"})
+    fn = space.build(cand)
+    fn(1)
+    assert calls[-1] == "pallas"
+    assert space.binding_of(cand) == {"norm": "pallas"}
+
+
+def test_binding_space_from_patterns_default_sentinel():
+    reg = FunctionBlockRegistry()
+    reg.register("m", "ref", lambda x: x)
+    reg.register("m", "xla", lambda x: x)
+    reg.register("n", "ref", lambda x: x)
+    patterns = [{"m": "ref"}, {"m": "xla", "n": "ref"}]
+    space = BindingSpace.from_patterns(
+        lambda: (lambda x: x), patterns, registry=reg
+    )
+    # "n" is absent from the first pattern -> gets the default sentinel
+    ax = {a.name: a for a in space.axes}
+    assert ax["n"].choices[0] == planner.DEFAULT_TARGET
+    cand = space.candidate_from_mapping(patterns[0])
+    assert space.binding_of(cand) == {"m": "ref"}  # no binding for "n"
+
+
+# -- strategies ---------------------------------------------------------------
+
+
+def test_strategy_parity_with_brute_force():
+    """On a small space, single-then-combine and the GA agree with the
+    exhaustively measured optimum."""
+    names = ["a", "b", "c"]
+    brute = ExhaustiveSearch().search(
+        sleep_subset_space(COSTS3, names), (0,),
+        cache=MeasurementCache(), repeats=1,
+    )
+    assert brute.best.pattern == ("a", "b")
+
+    stc = SingleThenCombine().search(
+        sleep_subset_space(COSTS3, names), (0,),
+        cache=MeasurementCache(), repeats=1,
+    )
+    assert stc.best.pattern == brute.best.pattern
+
+    ga = GeneticSearch(population=6, generations=5, seed=0).search(
+        sleep_subset_space(COSTS3, names), (0,),
+        cache=MeasurementCache(), repeats=1,
+    )
+    assert ga.best.pattern == brute.best.pattern
+    assert ga.generations is not None and len(ga.generations) == 5
+
+
+def test_single_then_combine_measures_only_paper_trials():
+    sp = sleep_subset_space(COSTS3, ["a", "b", "c"])
+    cache = MeasurementCache()
+    rep = SingleThenCombine().search(sp, (0,), cache=cache, repeats=1)
+    # baseline + 3 singles + winning combination, nothing else
+    assert {t.pattern for t in rep.trials} == {
+        (), ("a",), ("b",), ("c",), ("a", "b")
+    }
+    assert rep.evaluations == 5 == cache.misses
+
+
+def test_ga_nary_genome_on_binding_space():
+    reg = FunctionBlockRegistry()
+    for target, delay in [("ref", 0.02), ("xla", 0.004), ("pallas", 0.012)]:
+        reg.register(
+            "norm", target,
+            (lambda d: lambda x: (time.sleep(d), x)[1])(delay),
+        )
+    space = BindingSpace(lambda: (lambda x: reg.call("norm", x)),
+                         registry=reg)
+    rep = GeneticSearch(population=3, generations=3, seed=0).search(
+        space, (1,), cache=MeasurementCache(), repeats=1
+    )
+    assert rep.best.mapping == {"norm": "xla"}
+
+
+def test_shared_cache_prevents_cross_strategy_remeasurement():
+    names = ["a", "b", "c"]
+    sp = sleep_subset_space(COSTS3, names)
+    cache = MeasurementCache()
+    SingleThenCombine().search(sp, (0,), cache=cache, repeats=1)
+    assert cache.misses == 5 and cache.hits == 0
+
+    # exhaustive sweep afterwards only measures the 3 unvisited patterns
+    rep = ExhaustiveSearch().search(sp, (0,), cache=cache, repeats=1)
+    assert rep.evaluations == 3
+    assert cache.misses == 8
+    assert cache.hits == 5  # baseline + 3 singles + combo replayed from cache
+    cached_patterns = {t.pattern for t in rep.trials if t.cached}
+    assert ("a", "b") in cached_patterns
+
+
+def test_cost_guided_search_measures_only_top_k():
+    sp = sleep_subset_space(COSTS3, ["a", "b", "c"])
+    est = {c: COSTS3[frozenset(p)] for c, p in [
+        ((1, 0, 0), {"a"}), ((0, 1, 0), {"b"}), ((0, 0, 1), {"c"}),
+        ((1, 1, 0), {"a", "b"}), ((1, 0, 1), {"a", "c"}),
+        ((0, 1, 1), {"b", "c"}), ((1, 1, 1), {"a", "b", "c"}),
+    ]}
+    cache = MeasurementCache()
+    rep = CostGuidedSearch(
+        top_k=2, cost_fn=lambda space, cand, args: est[cand]
+    ).search(sp, (0,), cache=cache, repeats=1)
+    # baseline + the 2 cheapest-by-model candidates, nothing else
+    assert cache.misses == 3
+    assert rep.best.pattern == ("a", "b")
+
+
+def test_cost_guided_search_falls_back_when_model_fails():
+    sp = sleep_subset_space(
+        {frozenset(): 0.02, frozenset({"a"}): 0.005}, ["a"]
+    )
+
+    def broken(space, cand, args):
+        raise RuntimeError("untraceable")
+
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        rep = CostGuidedSearch(top_k=1, cost_fn=broken).search(
+            sp, (0,), cache=MeasurementCache(), repeats=1
+        )
+    assert any("falling back" in str(x.message) for x in w)
+    assert rep.best.pattern == ("a",)
+
+
+def test_roofline_cost_ranks_jax_variants():
+    jnp = pytest.importorskip("jax.numpy")
+    small = jnp.ones((8, 8), jnp.float32)
+    t_small = planner.roofline_seconds(lambda x: x @ x, (small,))
+    big = jnp.ones((64, 64), jnp.float32)
+    t_big = planner.roofline_seconds(lambda x: x @ x, (big,))
+    assert 0 < t_small < t_big
+
+
+# -- persistent plans ---------------------------------------------------------
+
+
+def _binding_space_with_counter(counter):
+    reg = FunctionBlockRegistry()
+    for target, delay in [("ref", 0.015), ("xla", 0.003)]:
+        def mk(d=delay):
+            def impl(x):
+                counter["calls"] += 1
+                time.sleep(d)
+                return x
+
+            return impl
+
+        reg.register("norm", target, mk())
+    return BindingSpace(
+        lambda: (lambda x: reg.call("norm", x)), registry=reg
+    )
+
+
+def test_plan_store_roundtrip_and_zero_measurement_reload(tmp_path):
+    counter = {"calls": 0}
+    store = PlanStore(tmp_path)
+
+    space = _binding_space_with_counter(counter)
+    p1 = Planner(space, ExhaustiveSearch(), store=store)
+    plan, report = p1.plan((1,), key="serve:test", repeats=1)
+    assert report is not None  # a real search happened
+    assert p1.cache.misses > 0
+    assert plan.mapping == {"norm": "xla"}
+    assert store.path_for("serve:test").exists()
+
+    # second process: fresh planner + cache, same store -> zero measurement
+    counter2 = {"calls": 0}
+    p2 = Planner(
+        _binding_space_with_counter(counter2), ExhaustiveSearch(), store=store
+    )
+    plan2, report2 = p2.plan((1,), key="serve:test", repeats=1)
+    assert report2 is None  # served from the store
+    assert p2.cache.misses == 0
+    assert counter2["calls"] == 0  # no variant was ever built or run
+    assert plan2.mapping == plan.mapping
+    assert plan2.speedup == pytest.approx(plan.speedup)
+
+
+def test_plan_store_fingerprint_mismatch_forces_research(tmp_path):
+    store = PlanStore(tmp_path)
+    counter = {"calls": 0}
+    space = _binding_space_with_counter(counter)
+    plan, _ = Planner(space, ExhaustiveSearch(), store=store).plan(
+        (1,), key="k", repeats=1
+    )
+    # corrupt the fingerprint: pretend it was verified on other hardware
+    stale = Plan.from_json(plan.to_json())
+    stale.fingerprint = dict(plan.fingerprint, device="fpga-board-42")
+    store.save(stale)
+
+    assert store.load("k") is None  # invisible under this environment
+    p2 = Planner(_binding_space_with_counter(counter), ExhaustiveSearch(),
+                 store=store)
+    _, report2 = p2.plan((1,), key="k", repeats=1)
+    assert report2 is not None  # re-searched, not silently reused
+
+
+def test_serve_loads_and_binds_plan_without_measurement(tmp_path):
+    """The production path: a plan saved by one process is loaded by
+    launch/serve.py helpers and bound via blocks.bind with zero search."""
+    from repro.launch.serve import load_plan_bindings
+
+    counter = {"calls": 0}
+    space = _binding_space_with_counter(counter)
+    Planner(space, ExhaustiveSearch(), store=PlanStore(tmp_path)).plan(
+        (1,), key="serve:prod", repeats=1
+    )
+    calls_after_search = counter["calls"]
+    assert calls_after_search > 0
+
+    # the global registry must know the plan's block for it to be loadable
+    blocks.registry.register("norm", "xla", lambda x: x)
+    mapping = load_plan_bindings(str(tmp_path), "serve:prod")
+    assert mapping == {"norm": "xla"}
+    # loading measured nothing and never invoked a block implementation
+    assert counter["calls"] == calls_after_search
+
+    seen = []
+    blocks.registry.register(
+        "planner_test_block", "xla", lambda x: seen.append(x) or x
+    )
+    with blocks.bind({"planner_test_block": mapping["norm"]}):
+        blocks.call("planner_test_block", 7)
+    assert seen == [7]
+
+
+def test_load_plan_bindings_rejects_stale_registry_mapping(tmp_path):
+    """A plan naming a block/target that no longer exists must not bind."""
+    from repro.launch.plans import load_plan_bindings
+
+    plan = Plan(
+        key="stale", space="sig", mapping={"ghost_block": "pallas"},
+        pattern=("ghost_block",), baseline_seconds=1.0, best_seconds=0.5,
+        speedup=2.0, strategy="exhaustive", evaluations=2,
+        search_seconds=0.1,
+        fingerprint=planner.environment_fingerprint(), created_unix=0.0,
+    )
+    PlanStore(tmp_path).save(plan)
+    assert load_plan_bindings(str(tmp_path), "stale") is None
+
+
+def test_cache_distinguishes_workloads_with_same_axes():
+    """Two apps discovering identically-named blocks must not share
+    measurements: the cache key carries the builder tag and arg shapes."""
+    import numpy as np
+
+    def build_a(subset):
+        return lambda x: (time.sleep(0.02 if subset else 0.001), x)[1]
+
+    def build_b(subset):
+        return lambda x: (time.sleep(0.001 if subset else 0.02), x)[1]
+
+    cache = MeasurementCache()
+    sp_a = SubsetSpace(build_a, ["blk"], tag="app_a")
+    sp_b = SubsetSpace(build_b, ["blk"], tag="app_b")
+    rep_a = ExhaustiveSearch().search(sp_a, (0,), cache=cache, repeats=1)
+    rep_b = ExhaustiveSearch().search(sp_b, (0,), cache=cache, repeats=1)
+    assert cache.misses == 4  # nothing replayed across the two apps
+    assert rep_a.best.pattern == ()  # offloading hurts app A
+    assert rep_b.best.pattern == ("blk",)  # and helps app B
+
+    # same app, different input shape -> measured separately too
+    sp_a2 = SubsetSpace(build_a, ["blk"], tag="app_a")
+    ExhaustiveSearch().search(
+        sp_a2, (np.ones((8, 8)),), cache=cache, repeats=1
+    )
+    assert cache.misses == 6
+
+
+def test_plan_json_roundtrip_fields(tmp_path):
+    plan = Plan(
+        key="k", space="sig", mapping={"m": "xla"}, pattern=("m",),
+        baseline_seconds=1.0, best_seconds=0.5, speedup=2.0,
+        strategy="exhaustive", evaluations=3, search_seconds=0.1,
+        fingerprint={"device": "cpu"}, created_unix=123.0,
+    )
+    store = PlanStore(tmp_path)
+    store.save(plan)
+    loaded = store.load("k", fingerprint={"device": "cpu"})
+    assert loaded == plan
+    assert store.keys() == ["k"]
+
+
+# -- engine integration -------------------------------------------------------
+
+
+def test_measure_block_pattern_routes_through_cache():
+    from repro.core.engine import OffloadEngine
+
+    reg_calls = {"calls": 0}
+    blocks.registry.register(
+        "planner_probe", "slow",
+        lambda x: (reg_calls.__setitem__("calls", reg_calls["calls"] + 1),
+                   time.sleep(0.01), x)[-1],
+    )
+    blocks.registry.register(
+        "planner_probe", "fast",
+        lambda x: (reg_calls.__setitem__("calls", reg_calls["calls"] + 1),
+                   x)[-1],
+    )
+
+    def builder():
+        return lambda x: blocks.call("planner_probe", x)
+
+    eng = OffloadEngine()
+    cache = MeasurementCache()
+    patterns = [{"planner_probe": "slow"}, {"planner_probe": "fast"}]
+    best, results = eng.measure_block_pattern(
+        builder, patterns, (1,), repeats=1, cache=cache
+    )
+    assert best == {"planner_probe": "fast"}
+    assert [p for p, _ in results] == patterns
+    assert cache.misses == 2
+
+    # same cache, second sweep: everything replays, nothing is re-measured
+    calls_before = reg_calls["calls"]
+    best2, _ = eng.measure_block_pattern(
+        builder, patterns, (1,), repeats=1, cache=cache
+    )
+    assert best2 == best
+    assert cache.misses == 2
+    assert reg_calls["calls"] == calls_before

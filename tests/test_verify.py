@@ -87,6 +87,35 @@ def test_measure_reports_compile_time_separately():
     assert m.seconds < 0.05
 
 
+def test_measure_min_seconds_floor_repeats_short_kernels():
+    calls = {"n": 0}
+
+    def fast(x):
+        calls["n"] += 1
+        time.sleep(0.001)
+        return x
+
+    m = measure(fast, (0,), repeats=2, warmup=0, min_seconds=0.03)
+    # each of the 2 timed windows must span >= 30 ms, so a ~1 ms kernel is
+    # called many times per window rather than once (bound is loose: sleep
+    # can take several ms on a loaded CI runner)
+    assert calls["n"] >= 2 * 5
+    # per-call time is reported, not the window total
+    assert 0.0005 < m.seconds < 0.02
+    assert m.repeats == 2
+
+
+def test_measure_min_seconds_default_zero_single_call():
+    calls = {"n": 0}
+
+    def fn(x):
+        calls["n"] += 1
+        return x
+
+    measure(fn, (0,), repeats=3, warmup=1)
+    assert calls["n"] == 4  # warmup + one call per repeat, no floor looping
+
+
 def test_verify_numerics_tuple_and_scalar():
     f = lambda x: (x * 2.0, x + 1.0)
     g = lambda x: (x * 2.0 + 1e-9, x + 1.0)
