@@ -12,6 +12,11 @@ test:
 test-fast:
 	./scripts/test.sh fast
 
+# Critical-tier lint (see ruff.toml): syntax errors, undefined names.
+.PHONY: lint
+lint:
+	$(PYTHON) -m ruff check src tests benchmarks examples
+
 .PHONY: deps-dev
 deps-dev:
 	$(PYTHON) -m pip install -r requirements-dev.txt

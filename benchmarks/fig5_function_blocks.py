@@ -31,7 +31,8 @@ def run(n_fft: int = 256,  # must be a power of two (radix-2 FFT)
     import jax.numpy as jnp
 
     from repro.apps import fourier, matrix
-    from repro.core import OffloadEngine, planner
+    from repro.core import planner
+    from repro.offload import OffloadSession
 
     def loop_ga(build_variant, n_genes, args, population, generations, seed=0):
         """Prior-work loop-offload GA via the planner (binary genome)."""
@@ -40,7 +41,10 @@ def run(n_fft: int = 256,  # must be a power of two (radix-2 FFT)
             population=population, generations=generations, seed=seed
         ).search(space, args, cache=planner.MeasurementCache(), repeats=1)
 
-    eng = OffloadEngine()
+    def block_offload(app_fn, args):
+        """Function-block offload (this paper) as one session lifecycle."""
+        return OffloadSession(app_fn, args=args, repeats=repeats).run()
+
     out: dict = {}
 
     # ---- Fourier transform application --------------------------------
@@ -57,16 +61,16 @@ def run(n_fft: int = 256,  # must be a power of two (radix-2 FFT)
          f"GA best genome={''.join(map(str, ga.best.candidate))} "
          f"speedup={t_cpu/t_loop:.1f}x search={ga.search_seconds:.1f}s")
 
-    res = eng.adapt(fourier.fourier_app_libcall, (x,), repeats=repeats)
-    t_block = res.verification.best.seconds
+    res = block_offload(fourier.fourier_app_libcall, (x,))
+    t_block = res.best_seconds
     emit(f"fig5.fft.block.n{n_fft}", t_block,
-         f"pattern={res.offload_pattern} speedup={t_cpu/t_block:.1f}x "
-         f"search={res.verification.search_seconds:.1f}s "
+         f"pattern={res.pattern} speedup={t_cpu/t_block:.1f}x "
+         f"search={res.report.search_seconds:.1f}s "
          f"numerics_ok={res.numerics_ok}")
     out["fft"] = dict(cpu=t_cpu, loop=t_loop, block=t_block,
                       loop_speedup=t_cpu / t_loop, block_speedup=t_cpu / t_block,
                       ga_search_s=ga.search_seconds,
-                      block_search_s=res.verification.search_seconds)
+                      block_search_s=res.report.search_seconds)
 
     # ---- matrix-calculation (LU) application ---------------------------
     a = matrix.make_input(n_lu)
@@ -82,10 +86,10 @@ def run(n_fft: int = 256,  # must be a power of two (radix-2 FFT)
          f"GA best genome={''.join(map(str, ga.best.candidate))} "
          f"speedup={t_cpu/t_loop:.1f}x search={ga.search_seconds:.1f}s")
 
-    res = eng.adapt(matrix.matrix_app_libcall, (a,), repeats=repeats)
-    t_block = res.verification.best.seconds
+    res = block_offload(matrix.matrix_app_libcall, (a,))
+    t_block = res.best_seconds
     emit(f"fig5.lu.block.n{n_lu}", t_block,
-         f"pattern={res.offload_pattern} speedup={t_cpu/t_block:.1f}x "
+         f"pattern={res.pattern} speedup={t_cpu/t_block:.1f}x "
          f"numerics_ok={res.numerics_ok}")
     out["lu"] = dict(cpu=t_cpu, loop=t_loop, block=t_block,
                      loop_speedup=t_cpu / t_loop, block_speedup=t_cpu / t_block)

@@ -17,28 +17,28 @@ warnings.filterwarnings("ignore")
 import numpy as np
 
 from repro.apps import matrix
-from repro.core import OffloadEngine, Policy
+from repro.core import Policy
 from repro.core.interface import InterfaceSpec, Param, match_interfaces
+from repro.offload import OffloadSession
 
 
 def main() -> None:
     a = matrix.make_input(128)
-    eng = OffloadEngine()
 
     print("=== A-1/B-1: library call found by name ===")
-    res = eng.adapt(matrix.matrix_app_libcall, (a,), repeats=1)
+    res = OffloadSession(matrix.matrix_app_libcall, args=(a,), repeats=1).run()
     d = res.discoveries[0]
     print(f"  {d.source_name} -> {d.entry.name} via {d.kind}")
     print(f"  recipe: {d.entry.usage_recipe[:70]}...")
-    print(f"  speedup {res.verification.best.speedup:.1f}x, "
+    print(f"  speedup {res.speedup:.1f}x, "
           f"numerics ok: {res.numerics_ok}")
 
     print("=== A-2/B-2: copied code found by similarity ===")
-    res2 = eng.adapt(matrix.matrix_app_copied, (a,), repeats=1)
+    res2 = OffloadSession(matrix.matrix_app_copied, args=(a,), repeats=1).run()
     d2 = res2.discoveries[0]
     print(f"  {d2.source_name} -> {d2.entry.name} via {d2.kind} "
           f"(score {d2.score:.2f})")
-    print(f"  speedup {res2.verification.best.speedup:.1f}x")
+    print(f"  speedup {res2.speedup:.1f}x")
 
     print("=== C-2: interface mismatch requires confirmation ===")
     src = InterfaceSpec(

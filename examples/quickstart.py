@@ -1,9 +1,9 @@
-"""Quickstart: the paper's pipeline in 60 seconds.
+"""Quickstart: the paper's pipeline in 60 seconds, as one OffloadSession.
 
 1. Take a CPU application (naive Numerical-Recipes 2-D FFT).
-2. OffloadEngine Step 1-3: analyze source, discover the offloadable
-   function block via the Code-Pattern DB, substitute the accelerated
-   implementation, verify by measurement.
+2. Run the lifecycle stage by stage: analyze the source, discover the
+   offloadable function block via the Code-Pattern DB, search offload
+   patterns by measurement, verify numerics, commit the winner.
 3. Compare with the prior-work GA loop offloader (paper Fig. 4/5).
 
   PYTHONPATH=src python examples/quickstart.py [--fast]
@@ -23,23 +23,27 @@ def main() -> None:
     n = 64 if args.fast else 192
 
     from repro.apps import fourier
-    from repro.core import OffloadEngine, run_ga
+    from repro.core import run_ga
+    from repro.offload import OffloadSession
 
     x = fourier.make_input(n)
-    eng = OffloadEngine()
 
     print(f"=== function-block offload (the paper) — {n}x{n} 2-D FFT ===")
-    res = eng.adapt(fourier.fourier_app_libcall, (x,), repeats=1)
-    for d in res.discoveries:
+    session = OffloadSession(fourier.fourier_app_libcall, args=(x,), repeats=1)
+    session.analyze()
+    for d in session.discover():
         print(f"  discovered: {d.source_name} -> {d.entry.name} "
               f"({d.kind}, target {d.entry.target})")
-    for t in res.verification.trials:
+    session.plan()
+    session.verify()
+    res = session.commit()
+    for t in res.trials:
         print(f"  trial {t.pattern or '(baseline)'}: {t.seconds*1e3:.1f} ms "
               f"({t.speedup:.1f}x)")
-    print(f"  best offload pattern: {res.offload_pattern} "
-          f"speedup {res.verification.best.speedup:.1f}x, "
+    print(f"  best offload pattern: {res.pattern} "
+          f"speedup {res.speedup:.1f}x, "
           f"numerics verified: {res.numerics_ok}, "
-          f"search took {res.verification.search_seconds:.1f}s")
+          f"search took {res.report.search_seconds:.1f}s")
 
     print("=== prior-work loop offload (GA) on the same app ===")
     ga = run_ga(
@@ -51,7 +55,7 @@ def main() -> None:
           f"after {ga.evaluations} measured trials "
           f"({ga.search_seconds:.1f}s search)")
 
-    ratio = ga.best_seconds / res.verification.best.seconds
+    ratio = ga.best_seconds / res.best_seconds
     print(f"=== function-block offload is {ratio:.1f}x faster than the best "
           f"loop-offload pattern (paper Fig. 5, in kind) ===")
 

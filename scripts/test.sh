@@ -9,7 +9,8 @@ mode="${1:-full}"
 case "$mode" in
   fast)
     exec python -m pytest -q \
-      tests/test_planner.py tests/test_verify.py tests/test_ga.py \
+      tests/test_planner.py tests/test_offload_session.py \
+      tests/test_verify.py tests/test_ga.py \
       tests/test_engine.py tests/test_blocks.py tests/test_core_ast.py \
       tests/test_pattern_db.py tests/test_similarity.py \
       tests/test_interface.py tests/test_hlo_cost.py

@@ -22,7 +22,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import Any, Callable, Iterator, Mapping
+from typing import Any, Callable, Iterable, Iterator, Mapping
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,6 +52,20 @@ class FunctionBlockRegistry:
 
     def targets(self, block: str) -> list[str]:
         return sorted(self._impls.get(block, {}))
+
+    def shelf_fingerprint(self, blocks: Iterable[str] | None = None) -> str:
+        """Hash of the *currently registered* implementations for the named
+        blocks: (block, target, fn source) plus bound partial arguments.
+        Registry state is import-order dependent (modules may re-register
+        a block at import time), so persisted-plan fingerprints should use
+        a registration-time snapshot instead — see
+        ``repro.kernels.SHELF_FINGERPRINT`` / ``implementations_fingerprint``."""
+        names = sorted(blocks) if blocks is not None else self.blocks()
+        return implementations_fingerprint(
+            (block, target, self._impls[block][target].fn)
+            for block in names
+            for target in self.targets(block)
+        )
 
     # -- binding --------------------------------------------------------------
     @property
@@ -90,6 +104,34 @@ class FunctionBlockRegistry:
 
     def current_pattern(self) -> dict[str, str]:
         return dict(self._bindings)
+
+
+def implementations_fingerprint(
+    impls: "Iterable[tuple[str, str, Callable[..., Any]]]",
+) -> str:
+    """Hash (block, target, fn) triples by fn *source* (plus bound partial
+    arguments), order-insensitively.  A kernel rewrite changes the hash,
+    which invalidates stored plans measured against the old code
+    (PlanStore fingerprint component)."""
+    import functools
+    import hashlib
+    import inspect
+
+    parts = []
+    for block, target, fn in impls:
+        bound = ""
+        while isinstance(fn, functools.partial):
+            bound += repr((fn.args, sorted((fn.keywords or {}).items())))
+            fn = fn.func
+        try:
+            src = inspect.getsource(fn)
+        except (OSError, TypeError):  # builtins / C extensions
+            src = repr(fn)
+        parts.append(f"{block}|{target}|{bound}|{src}")
+    h = hashlib.sha256()
+    for p in sorted(parts):
+        h.update(p.encode())
+    return h.hexdigest()[:16]
 
 
 # Global registry used by the model zoo.

@@ -67,6 +67,21 @@ class AdaptedApp:
     offload_pattern: tuple[str, ...]
 
 
+@dataclasses.dataclass
+class PreparedApp:
+    """Steps 1-2 output: the searchable space for an existing application.
+
+    Produced by ``OffloadEngine.prepare``; consumed by
+    ``repro.offload.OffloadSession`` (whose ``plan`` stage searches
+    ``space`` and whose ``commit`` stage builds the winning variant).
+    """
+
+    space: "planner.SubsetSpace"
+    discoveries: list[Discovery]
+    skipped: list[Discovery]
+    source_report: ast_analysis.SourceReport
+
+
 def _resolve_dotted(ns: Mapping[str, Any], dotted: str) -> Any | None:
     obj: Any = ns.get(dotted.split(".")[0])
     for part in dotted.split(".")[1:]:
@@ -200,25 +215,27 @@ class OffloadEngine:
             return None
         return _host_wrap(adaptation.wrap(impl))
 
-    # -- Step 3 -----------------------------------------------------------------
-    def adapt(
+    # -- Steps 1-2, packaged for the session ------------------------------------
+    def prepare(
         self,
         app_fn: Callable[..., Any],
         example_args: Sequence[Any],
-        repeats: int = 3,
-        verify_rtol: float = 1e-3,
-        strategy: "planner.SearchStrategy | None" = None,
-        cache: "planner.MeasurementCache | None" = None,
-    ) -> AdaptedApp:
+        report: ast_analysis.SourceReport | None = None,
+    ) -> PreparedApp:
+        """Analyze + discover + reconcile interfaces, and wrap the result as
+        a ``planner.SubsetSpace`` whose candidates are source-substituted
+        variants of the application.  ``report`` short-cuts Step 1 when the
+        caller (the session's ``analyze`` stage) already parsed the module."""
         module = inspect.getmodule(app_fn)
         if module is None:  # pragma: no cover
             raise ValueError("cannot locate the application's module source")
         module_src = inspect.getsource(module)
         module_ns = vars(module)
 
-        report = ast_analysis.analyze_source(
-            module_src, self.db.known_library_names
-        )
+        if report is None:
+            report = ast_analysis.analyze_source(
+                module_src, self.db.known_library_names
+            )
         discoveries = self.discover(report, entry_fn=app_fn.__name__)
 
         # Record each discovered block's observed interface by instrumenting
@@ -275,25 +292,45 @@ class OffloadEngine:
             [d.entry.name for d in active],
             tag=f"{app_fn.__module__}.{app_fn.__qualname__}",
         )
-        search = strategy or planner.SingleThenCombine()
-        report = search.search(
-            space,
-            example_args,
-            cache=planner.MeasurementCache() if cache is None else cache,
-            repeats=repeats,
-        )
-        vreport = planner.to_verification_report(report)
-        best_fn = build_variant(frozenset(vreport.best.pattern))
-        numerics_ok = verify.verify_numerics(
-            app_fn, best_fn, example_args, rtol=verify_rtol, atol=verify_rtol
-        )
-        return AdaptedApp(
-            fn=best_fn,
+        return PreparedApp(
+            space=space,
             discoveries=active,
             skipped=skipped,
-            verification=vreport,
-            numerics_ok=numerics_ok,
-            offload_pattern=vreport.best.pattern,
+            source_report=report,
+        )
+
+    # -- Step 3 -----------------------------------------------------------------
+    def adapt(
+        self,
+        app_fn: Callable[..., Any],
+        example_args: Sequence[Any],
+        repeats: int = 3,
+        verify_rtol: float = 1e-3,
+        strategy: "planner.SearchStrategy | None" = None,
+        cache: "planner.MeasurementCache | None" = None,
+    ) -> AdaptedApp:
+        """Deprecated shim: the full lifecycle in one call, now delegated to
+        ``repro.offload.OffloadSession``.  New code should drive the session
+        directly (it adds objectives, plan persistence and staged control)."""
+        from repro.offload import OffloadSession
+
+        session = OffloadSession(
+            app_fn,
+            args=example_args,
+            engine=self,
+            strategy=strategy,
+            cache=cache,
+            repeats=repeats,
+            rtol=verify_rtol,
+        )
+        result = session.run()
+        return AdaptedApp(
+            fn=result.fn,
+            discoveries=result.discoveries,
+            skipped=result.skipped,
+            verification=result.verification,
+            numerics_ok=bool(result.numerics_ok),
+            offload_pattern=result.pattern,
         )
 
     # -- framework-native path: block bindings for the model zoo ---------------
@@ -315,23 +352,35 @@ class OffloadEngine:
         cache: "planner.MeasurementCache | None" = None,
         min_seconds: float = 0.0,
     ) -> tuple[dict[str, str], list[tuple[dict[str, str], float]]]:
-        """Measured binding selection (verification-environment case) — an
-        ``ExhaustiveSearch`` over a ``BindingSpace`` restricted to the listed
-        patterns, re-tracing the step under each candidate binding."""
+        """Deprecated shim: measured binding selection over the listed
+        patterns, now delegated to ``repro.offload.OffloadSession`` (binding
+        mode, exhaustive strategy, numerics stage skipped — the historical
+        contract measured only)."""
+        from repro.offload import OffloadSession
+
         space = planner.BindingSpace.from_patterns(
             step_builder, patterns, registry=block_registry
         )
+        # closures from one factory share a __qualname__ (the default tag):
+        # disambiguate by object identity so two models measured through
+        # the same factory never answer each other's cache lookups
+        space.tag = (
+            f"{getattr(step_builder, '__qualname__', 'step')}"
+            f"@{id(step_builder):x}"
+        )
         cands = [space.candidate_from_mapping(dict(p)) for p in patterns]
-        report = planner.ExhaustiveSearch(
-            candidates=cands, include_baseline=False
-        ).search(
+        session = OffloadSession(
             space,
-            args,
-            cache=planner.MeasurementCache() if cache is None else cache,
+            args=args,
+            strategy=planner.ExhaustiveSearch(
+                candidates=cands, include_baseline=False
+            ),
+            cache=cache,
             repeats=repeats,
             min_seconds=min_seconds,
         )
-        by_key = {t.candidate: t.seconds for t in report.trials}
+        result = session.run(verify=False, build=False)
+        by_key = {t.candidate: t.seconds for t in result.report.trials}
         results = [
             (dict(pat), by_key[cand]) for pat, cand in zip(patterns, cands)
         ]

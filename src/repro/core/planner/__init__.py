@@ -21,9 +21,16 @@ factors the common structure into four pieces:
                 model and measures only the top-k (the paper's "FPGA
                 compilation takes hours — narrow candidates first"
                 pre-filter); ``ExhaustiveSearch`` measures a listed set.
+  Objective     *what "best" means*.  Every strategy ranks trials via
+                ``objective.score(trial)`` (lower = better): ``Latency``
+                is the paper's wall-seconds, ``PerfPerWatt`` minimises
+                joules per call (the follow-up power-saving work,
+                arXiv:2110.11520) fed by a pluggable ``PowerMeter`` with a
+                time-proportional fallback, ``WeightedCost`` blends both.
   MeasurementCache  shared memoisation keyed by canonical pattern, so no
                 strategy ever re-measures a visited pattern.  Preserves the
-                compile-time / runtime split per trial (paper Fig. 4).
+                compile-time / runtime split per trial (paper Fig. 4), and
+                the per-trial energy reading when a PowerMeter is wired.
   PlanStore     persistent JSON plans keyed by name + environment
                 fingerprint, so a production process (launch/serve.py,
                 launch/train.py) can load a previously verified plan and
@@ -35,7 +42,21 @@ persist the winner.
 
 from repro.core.planner.cache import MeasurementCache  # noqa: F401
 from repro.core.planner.cost import make_roofline_cost_fn, roofline_seconds  # noqa: F401
-from repro.core.planner.planner import Planner, declared_pattern  # noqa: F401
+from repro.core.planner.objectives import (  # noqa: F401
+    DEFAULT_DEVICE_WATTS,
+    Latency,
+    Objective,
+    PerfPerWatt,
+    PowerMeter,
+    TimeProportionalPower,
+    WeightedCost,
+    resolve_objective,
+)
+from repro.core.planner.planner import (  # noqa: F401
+    Planner,
+    declared_pattern,
+    plan_compatible,
+)
 from repro.core.planner.space import (  # noqa: F401
     DEFAULT_TARGET,
     Axis,

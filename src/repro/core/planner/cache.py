@@ -38,15 +38,28 @@ def args_fingerprint(args: Sequence[Any]) -> tuple:
         if shape is not None:
             parts.append(("array", tuple(shape), str(getattr(a, "dtype", ""))))
         elif isinstance(a, (bool, int, float, str, bytes, type(None))):
-            parts.append(("value", a))
+            # type name included: 1, 1.0 and True hash/compare equal in
+            # Python but can select different computation paths
+            parts.append(("value", type(a).__name__, a))
         else:
             parts.append(("object", type(a).__name__))
     return tuple(parts)
 
 
 class MeasurementCache:
-    def __init__(self) -> None:
+    def __init__(self, meter: Any = None) -> None:
+        """``meter``: optional ``objectives.PowerMeter`` whose begin/end
+        hooks bracket every new measurement; the joules it reports are
+        stored on the measurement (and replayed on cache hits) so
+        energy-aware objectives can rank trials.
+
+        Attach the meter for the cache's whole lifetime: entries measured
+        before a meter existed replay ``energy_joules=None``, which
+        energy-aware objectives score with their time-proportional
+        fallback — mixing metered and estimated joules in one ranking.
+        """
         self._data: dict[tuple, CacheRecord] = {}
+        self.meter = meter
         self.hits = 0
         self.misses = 0
 
@@ -87,9 +100,13 @@ class MeasurementCache:
             self.hits += 1
             return rec.measurement, True
         fn = space.build(cand)
+        if self.meter is not None:
+            self.meter.begin()
         m = verify.measure(
             fn, args, repeats=repeats, warmup=warmup, min_seconds=min_seconds
         )
+        if self.meter is not None:
+            m.energy_joules = self.meter.end(m, space=space, candidate=cand)
         self._data[key] = CacheRecord(key, m)
         self.misses += 1
         return m, False

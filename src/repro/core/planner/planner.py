@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import Any, Sequence
 
 from repro.core.planner.cache import MeasurementCache
+from repro.core.planner.objectives import Objective, resolve_objective
 from repro.core.planner.space import SearchSpace
 from repro.core.planner.store import Plan, PlanStore, plan_from_report
 from repro.core.planner.strategies import (
@@ -18,6 +19,17 @@ from repro.core.planner.strategies import (
     SearchStrategy,
     SingleThenCombine,
 )
+
+
+def plan_compatible(space: SearchSpace, plan: Plan) -> bool:
+    """A stored plan is usable when every chosen (axis, target) still
+    exists in the space being planned over."""
+    by_name = {a.name: a for a in space.axes}
+    for name, label in plan.mapping.items():
+        axis = by_name.get(name)
+        if axis is None or label not in axis.choices:
+            return False
+    return True
 
 
 def declared_pattern(
@@ -55,21 +67,16 @@ class Planner:
         strategy: SearchStrategy | None = None,
         cache: MeasurementCache | None = None,
         store: PlanStore | None = None,
+        objective: "Objective | str | None" = None,
     ) -> None:
         self.space = space
         self.strategy = strategy or SingleThenCombine()
         self.cache = MeasurementCache() if cache is None else cache
         self.store = store
+        self.objective = objective
 
     def _compatible(self, plan: Plan) -> bool:
-        """A stored plan is usable when every chosen (axis, target) still
-        exists in the current space."""
-        by_name = {a.name: a for a in self.space.axes}
-        for name, label in plan.mapping.items():
-            axis = by_name.get(name)
-            if axis is None or label not in axis.choices:
-                return False
-        return True
+        return plan_compatible(self.space, plan)
 
     def plan(
         self,
@@ -78,15 +85,29 @@ class Planner:
         repeats: int = 3,
         min_seconds: float = 0.0,
         force_search: bool = False,
+        save: bool = True,
     ) -> tuple[Plan, PlanReport | None]:
         """Return ``(plan, report)``.
 
         ``report`` is None when the plan came straight from the store —
-        the zero-measurement production path.
+        the zero-measurement production path.  ``save=False`` defers
+        persistence to the caller (the session persists at its commit
+        stage, not its plan stage).
         """
         if self.store is not None and key is not None and not force_search:
             cached = self.store.load(key)
-            if cached is not None and self._compatible(cached):
+            # a stored plan only short-cuts the search when it answers the
+            # same question: same space (axes AND workload tag, via the
+            # signature) ranked by the same objective — otherwise a
+            # latency-selected plan would silently satisfy a PerfPerWatt
+            # caller, or a plan searched over one workload would silently
+            # satisfy a session planning a different one
+            if (
+                cached is not None
+                and self._compatible(cached)
+                and cached.space == self.space.signature()
+                and cached.objective == resolve_objective(self.objective).name
+            ):
                 return cached, None
         report = self.strategy.search(
             self.space,
@@ -94,10 +115,14 @@ class Planner:
             cache=self.cache,
             repeats=repeats,
             min_seconds=min_seconds,
+            objective=self.objective,
         )
         plan = plan_from_report(
             key or self.space.signature(), self.space.signature(), report
         )
-        if self.store is not None and key is not None:
+        # the deployable binding may pin more axes than the offload pattern
+        # (BindingSpace: baseline choices are explicit bindings too)
+        plan.mapping = dict(self.space.deploy_mapping(report.best.candidate))
+        if save and self.store is not None and key is not None:
             self.store.save(plan)
         return plan, report

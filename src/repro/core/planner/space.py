@@ -93,6 +93,13 @@ class SearchSpace:
         """Sorted names of the axes moved off their baseline choice."""
         return tuple(sorted(a.name for a, c in zip(self.axes, cand) if c != 0))
 
+    def deploy_mapping(self, cand: Candidate) -> dict[str, str]:
+        """The mapping a persisted Plan must carry so deployment reproduces
+        exactly this candidate.  Defaults to the non-baseline choices;
+        spaces whose baseline choice is itself an explicit binding (see
+        BindingSpace) override this to pin every axis."""
+        return self.mapping_of(cand)
+
     def candidate_from_mapping(self, mapping: Mapping[str, str]) -> Candidate:
         by_name = {a.name: a for a in self.axes}
         unknown = set(mapping) - set(by_name)
@@ -244,6 +251,13 @@ class BindingSpace(SearchSpace):
             for a, c in zip(self.axes, cand)
             if a.choices[c] != DEFAULT_TARGET
         }
+
+    def deploy_mapping(self, cand: Candidate) -> dict[str, str]:
+        """Persisted plans must pin *every* measured axis, baseline choices
+        included: a plan that omitted a block left on ``ref`` would deploy
+        under the registry's default preference (xla-first) — a binding
+        that was never the measured winner."""
+        return self.binding_of(cand)
 
     def build(self, cand: Candidate) -> Callable[..., Any]:
         self.validate(cand)

@@ -39,6 +39,18 @@ def environment_fingerprint(extra: Mapping[str, str] | None = None) -> dict[str,
             fp["device"] = getattr(devs[0], "device_kind", str(devs[0]))
     except Exception:  # noqa: BLE001 — planner must work without jax
         pass
+    try:
+        # the kernel shelf is part of the environment: a plan measured
+        # against one set of kernel implementations must not silently bind
+        # after a kernel rewrite, so the shelf sources are hashed in.
+        # Only the stock shelf (repro.kernels) counts, snapshotted at
+        # registration time — ad-hoc runtime registrations are not "the
+        # environment" and must not churn the hash between processes.
+        import repro.kernels as _shelf
+
+        fp["kernel_shelf"] = _shelf.SHELF_FINGERPRINT
+    except Exception:  # noqa: BLE001 — shelf needs jax; optional like above
+        pass
     if extra:
         fp.update(extra)
     return fp
@@ -58,6 +70,8 @@ class Plan:
     search_seconds: float
     fingerprint: dict[str, str]
     created_unix: float = 0.0
+    objective: str = "latency"  # objective that selected this pattern
+    best_energy_joules: float | None = None  # when a PowerMeter was wired
 
     def to_json(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -119,16 +133,22 @@ class PlanStore:
             plan = Plan.from_json(json.loads(path.read_text()))
         except Exception:  # noqa: BLE001 — corrupt plan == no plan
             return None
+        if plan.key != key:
+            # distinct keys can slug to the same filename ('a:b' vs 'a_b');
+            # never hand back a plan verified under a different key
+            return None
         if match_fingerprint:
             current = dict(fingerprint) if fingerprint is not None else (
                 environment_fingerprint()
             )
-            for k, v in plan.fingerprint.items():
-                # a key the current environment cannot produce (e.g. no jax)
-                # is a mismatch, not a wildcard — never silently reuse a
-                # plan verified on hardware we can't even identify
-                if k not in current or current[k] != v:
-                    return None
+            # strict equality, both directions: a key only one side can
+            # produce is a mismatch, not a wildcard.  Plan-side extras
+            # mean hardware we can't even identify; current-side extras
+            # mean the plan predates a fingerprint component (e.g. the
+            # kernel-shelf hash) and could silently survive the very
+            # change that component exists to detect.
+            if dict(plan.fingerprint) != current:
+                return None
         return plan
 
 
@@ -148,4 +168,6 @@ def plan_from_report(key: str, space_signature: str, report: Any) -> Plan:
         search_seconds=report.search_seconds,
         fingerprint=environment_fingerprint(),
         created_unix=time.time(),
+        objective=getattr(report, "objective", "latency"),
+        best_energy_joules=getattr(report.best, "energy_joules", None),
     )

@@ -2,6 +2,9 @@
 
 All strategies measure through a shared ``MeasurementCache`` and produce a
 ``PlanReport`` whose trials keep the compile/runtime split per candidate.
+Winner selection goes through a pluggable ``Objective``
+(``objectives.Latency`` by default) — strategies never compare
+``trial.seconds`` directly, so power-aware objectives work everywhere.
 
   SingleThenCombine   the paper's §4.2 Step-3 procedure, generalised to
                       n-ary axes: baseline, every (axis, choice) alone,
@@ -27,6 +30,7 @@ from typing import Any, Callable, Iterable, Sequence
 
 from repro.core import verify
 from repro.core.planner.cache import MeasurementCache
+from repro.core.planner.objectives import Objective, resolve_objective
 from repro.core.planner.space import Candidate, SearchSpace
 
 
@@ -39,6 +43,8 @@ class PlanTrial:
     compile_seconds: float
     speedup: float  # vs the report's baseline
     cached: bool  # satisfied from the MeasurementCache
+    energy_joules: float | None = None  # per call, when a PowerMeter is wired
+    score: float = 0.0  # objective score; lower is better
 
 
 @dataclasses.dataclass
@@ -53,6 +59,7 @@ class PlanReport:
     evaluations: int  # newly measured (non-cached) trials
     strategy: str
     generations: list[float] | None = None  # GA: best speedup per generation
+    objective: str = "latency"  # objective that selected ``best``
 
     def trial(self, pattern: Iterable[str]) -> PlanTrial | None:
         key = tuple(sorted(pattern))
@@ -78,6 +85,34 @@ def to_verification_report(report: PlanReport) -> verify.VerificationReport:
     )
 
 
+def rank_candidates_by_cost(
+    space: SearchSpace,
+    args: Sequence[Any],
+    cost_fn: Callable[[SearchSpace, Candidate, Sequence[Any]], float]
+    | None = None,
+) -> list[tuple[float, Candidate]]:
+    """Every non-baseline candidate with its static cost estimate, sorted
+    cheapest first.  Unrankable candidates (cost_fn raised) estimate as
+    inf and sort last; callers detect a fully failed model by checking
+    ``all(est == inf)``.  ``cost_fn`` defaults to the HLO roofline."""
+    if cost_fn is None:
+        from repro.core.planner.cost import make_roofline_cost_fn
+
+        cost_fn = make_roofline_cost_fn()
+    baseline = space.baseline()
+    ranked: list[tuple[float, Candidate]] = []
+    for cand in space.enumerate():
+        if cand == baseline:
+            continue
+        try:
+            est = float(cost_fn(space, cand, args))
+        except Exception:  # noqa: BLE001 — unrankable candidate
+            est = float("inf")
+        ranked.append((est, cand))
+    ranked.sort(key=lambda rc: rc[0])
+    return ranked
+
+
 class SearchStrategy:
     name = "base"
 
@@ -88,13 +123,16 @@ class SearchStrategy:
         cache: MeasurementCache | None = None,
         repeats: int = 3,
         min_seconds: float = 0.0,
+        objective: Objective | str | None = None,
     ) -> PlanReport:
         raise NotImplementedError
 
 
 class _Run:
     """Bookkeeping shared by the concrete strategies: measure via the cache,
-    collect unique trials, track baseline and evaluation counts."""
+    collect unique trials, track baseline and evaluation counts.  All winner
+    selection goes through ``objective.score`` (lower is better), never
+    directly through ``trial.seconds``."""
 
     def __init__(
         self,
@@ -103,12 +141,14 @@ class _Run:
         cache: MeasurementCache,
         repeats: int,
         min_seconds: float,
+        objective: Objective | str | None = None,
     ) -> None:
         self.space = space
         self.args = args
         self.cache = cache
         self.repeats = repeats
         self.min_seconds = min_seconds
+        self.objective = resolve_objective(objective)
         self.t0 = time.perf_counter()
         self.misses0 = cache.misses
         self.trials: list[PlanTrial] = []
@@ -135,7 +175,9 @@ class _Run:
             compile_seconds=m.compile_seconds,
             speedup=(base / m.seconds) if base else 1.0,
             cached=cached,
+            energy_joules=m.energy_joules,
         )
+        trial.score = self.objective.score(trial)
         if base is None:
             self.baseline_seconds = m.seconds
             trial.speedup = 1.0
@@ -146,8 +188,12 @@ class _Run:
     def seconds_of(self, cand: Candidate) -> float:
         return self.measure(cand).seconds
 
+    def score_of(self, cand: Candidate) -> float:
+        """Objective score of a candidate (the strategies' fitness)."""
+        return self.measure(cand).score
+
     def report(self, strategy: str, generations: list[float] | None = None) -> PlanReport:
-        best = min(self.trials, key=lambda t: t.seconds)
+        best = min(self.trials, key=lambda t: t.score)
         base = self.baseline_seconds or best.seconds
         for t in self.trials:
             t.speedup = base / t.seconds
@@ -159,6 +205,7 @@ class _Run:
             evaluations=self.cache.misses - self.misses0,
             strategy=strategy,
             generations=generations,
+            objective=self.objective.name,
         )
 
 
@@ -177,24 +224,26 @@ class SingleThenCombine(SearchStrategy):
         cache: MeasurementCache | None = None,
         repeats: int = 3,
         min_seconds: float = 0.0,
+        objective: Objective | str | None = None,
     ) -> PlanReport:
         cache = MeasurementCache() if cache is None else cache
-        run = _Run(space, args, cache, repeats, min_seconds)
+        run = _Run(space, args, cache, repeats, min_seconds, objective)
 
         baseline = space.baseline()
         base_t = run.measure(baseline)
 
-        # best improving choice per axis, measured alone
+        # best improving choice per axis, measured alone ("improving" by the
+        # configured objective, not necessarily by wall time)
         winners: dict[int, int] = {}
         for i, axis in enumerate(space.axes):
             best_c: int | None = None
-            best_s = base_t.seconds
+            best_s = base_t.score
             for c in range(1, len(axis.choices)):
                 cand = list(baseline)
                 cand[i] = c
                 t = run.measure(tuple(cand))
-                if t.seconds < best_s:
-                    best_s = t.seconds
+                if t.score < best_s:
+                    best_s = t.score
                     best_c = c
             if best_c is not None:
                 winners[i] = best_c
@@ -215,7 +264,14 @@ class GeneticSearch(SearchStrategy):
     """Elitist generational GA with tournament selection, single-point
     crossover and per-gene mutation (prior work, paper §3.2).  Genes index
     into each axis's choice list, so the genome is binary on a SubsetSpace
-    and n-ary on a BindingSpace."""
+    and n-ary on a BindingSpace.
+
+    With ``seed_from_cost=True`` the initial population is not uniform
+    random: candidates are ranked by a static cost model (the HLO roofline
+    by default, same ranking CostGuidedSearch uses as a measurement
+    pre-filter) and the cheapest ones seed generation zero, so the GA
+    starts from the cost model's belief instead of noise.
+    """
 
     name = "genetic"
 
@@ -227,6 +283,10 @@ class GeneticSearch(SearchStrategy):
         elite: int = 2,
         tournament: int = 3,
         seed: int = 0,
+        seed_from_cost: bool = False,
+        cost_fn: Callable[[SearchSpace, Candidate, Sequence[Any]], float]
+        | None = None,
+        max_enumeration: int = 1024,
     ) -> None:
         self.population = population
         self.generations = generations
@@ -234,6 +294,35 @@ class GeneticSearch(SearchStrategy):
         self.elite = elite
         self.tournament = tournament
         self.seed = seed
+        self.seed_from_cost = seed_from_cost
+        self.cost_fn = cost_fn
+        self.max_enumeration = max_enumeration
+
+    def _cost_seeded(
+        self, space: SearchSpace, args: Sequence[Any]
+    ) -> list[Candidate]:
+        """Initial genomes from the static cost ranking (cheapest first),
+        or [] when the space is too large / no candidate is rankable."""
+        if space.size() > self.max_enumeration:
+            warnings.warn(
+                f"seed_from_cost: space has {space.size()} candidates "
+                f"(> max_enumeration={self.max_enumeration}); seeding "
+                "randomly instead",
+                stacklevel=2,
+            )
+            return []
+        ranked = rank_candidates_by_cost(space, args, self.cost_fn)
+        if not ranked or all(est == float("inf") for est, _ in ranked):
+            warnings.warn(
+                "seed_from_cost: cost model failed on every candidate; "
+                "seeding randomly instead",
+                stacklevel=2,
+            )
+            return []
+        # baseline always participates so the GA can report "don't offload"
+        seeds = [space.baseline()]
+        seeds.extend(c for _, c in ranked[: max(self.population - 1, 1)])
+        return seeds[: self.population]
 
     def _mutate_gene(
         self, rng: random.Random, axis_card: int, gene: int
@@ -252,17 +341,20 @@ class GeneticSearch(SearchStrategy):
         cache: MeasurementCache | None = None,
         repeats: int = 3,
         min_seconds: float = 0.0,
+        objective: Objective | str | None = None,
     ) -> PlanReport:
         cache = MeasurementCache() if cache is None else cache
-        run = _Run(space, args, cache, repeats, min_seconds)
+        run = _Run(space, args, cache, repeats, min_seconds, objective)
         rng = random.Random(self.seed)
         cards = [len(a.choices) for a in space.axes]
         n_genes = len(cards)
 
         run.measure(space.baseline())
-        fitness = run.seconds_of
+        fitness = run.score_of
 
         pop: list[Candidate] = []
+        if self.seed_from_cost:
+            pop = self._cost_seeded(space, args)
         guard = 0
         while len(pop) < self.population and guard < self.population * 50:
             g = tuple(rng.randrange(c) for c in cards)
@@ -274,7 +366,9 @@ class GeneticSearch(SearchStrategy):
         base = run.baseline_seconds or 1.0
         for _gen in range(self.generations):
             scored = sorted(pop, key=fitness)
-            history.append(base / fitness(scored[0]))
+            # Fig. 4 curve stays a *speedup* (time ratio) regardless of the
+            # objective that ranks the population
+            history.append(base / run.measure(scored[0]).seconds)
             nxt: list[Candidate] = scored[: self.elite]
             while len(nxt) < self.population:
 
@@ -331,9 +425,10 @@ class ExhaustiveSearch(SearchStrategy):
         cache: MeasurementCache | None = None,
         repeats: int = 3,
         min_seconds: float = 0.0,
+        objective: Objective | str | None = None,
     ) -> PlanReport:
         cache = MeasurementCache() if cache is None else cache
-        run = _Run(space, args, cache, repeats, min_seconds)
+        run = _Run(space, args, cache, repeats, min_seconds, objective)
         if self.candidates is not None:
             cands = list(self.candidates)
         else:
@@ -382,36 +477,19 @@ class CostGuidedSearch(SearchStrategy):
         cache: MeasurementCache | None = None,
         repeats: int = 3,
         min_seconds: float = 0.0,
+        objective: Objective | str | None = None,
     ) -> PlanReport:
         cache = MeasurementCache() if cache is None else cache
-        run = _Run(space, args, cache, repeats, min_seconds)
-
-        cost_fn = self.cost_fn
-        if cost_fn is None:
-            from repro.core.planner.cost import make_roofline_cost_fn
-
-            cost_fn = make_roofline_cost_fn()
+        run = _Run(space, args, cache, repeats, min_seconds, objective)
 
         if space.size() > self.max_enumeration:
             raise ValueError(
                 f"space has {space.size()} candidates; CostGuidedSearch "
                 f"enumerates the space — raise max_enumeration or shrink it"
             )
-        baseline = space.baseline()
-        ranked: list[tuple[float, Candidate]] = []
-        n_failed = 0
-        for cand in space.enumerate():
-            if cand == baseline:
-                continue
-            try:
-                est = float(cost_fn(space, cand, args))
-            except Exception:  # noqa: BLE001 — unrankable candidate
-                est = float("inf")
-                n_failed += 1
-            ranked.append((est, cand))
-        ranked.sort(key=lambda rc: rc[0])
+        ranked = rank_candidates_by_cost(space, args, self.cost_fn)
 
-        run.measure(baseline)
+        run.measure(space.baseline())
         if ranked and all(est == float("inf") for est, _ in ranked):
             warnings.warn(
                 "CostGuidedSearch: cost model failed on every candidate; "

@@ -40,6 +40,7 @@ class Measurement:
     seconds: float  # median runtime
     compile_seconds: float  # first (warm-up) call minus median
     repeats: int
+    energy_joules: float | None = None  # per call, when a PowerMeter is wired
 
 
 def measure(
@@ -132,19 +133,45 @@ def verify_numerics(
     atol: float = 1e-3,
 ) -> bool:
     """Functional check that a substitution preserves results (the paper's
-    動作検証 step before deployment)."""
+    動作検証 step before deployment).
+
+    Structure-aware: outputs may be arrays, tuples (engine apps) or whole
+    pytrees (bound model steps) — structures must match leaf for leaf.
+    Low-precision floats (bfloat16) widen to f64 and complex stays complex
+    so the tolerance arithmetic is well-defined.
+    """
     import numpy as np
 
     a = original(*args)
     b = substituted(*args)
 
-    def _cmp(x, y) -> bool:
+    try:
+        import jax
+
+        la, ta = jax.tree.flatten(a)
+        lb, tb = jax.tree.flatten(b)
+        if ta != tb:
+            return False
+    except Exception:  # noqa: BLE001 — no jax: fall back to tuples/arrays
+        la = list(a) if isinstance(a, (tuple, list)) else [a]
+        lb = list(b) if isinstance(b, (tuple, list)) else [b]
+        if len(la) != len(lb):
+            return False
+
+    def widen(x):
+        # complex stays complex; float (incl. bfloat16, numpy kind 'V')
+        # widens to f64 so allclose arithmetic is well-defined
+        if x.dtype.kind == "c":
+            return x.astype(np.complex128)
+        if x.dtype.kind in "fV":
+            return x.astype(np.float64)
+        return x
+
+    for x, y in zip(la, lb):
         x = np.asarray(x)
         y = np.asarray(y)
         if x.shape != y.shape:
             return False
-        return bool(np.allclose(x, y, rtol=rtol, atol=atol))
-
-    if isinstance(a, tuple) and isinstance(b, tuple):
-        return len(a) == len(b) and all(_cmp(x, y) for x, y in zip(a, b))
-    return _cmp(a, b)
+        if not np.allclose(widen(x), widen(y), rtol=rtol, atol=atol):
+            return False
+    return True

@@ -12,50 +12,59 @@ from repro.core import blocks
 from repro.kernels import ops, ref  # noqa: F401
 
 
-def _register_all() -> None:
+def _register_all() -> list[tuple[str, str, object]]:
     r = blocks.registry
-    # matmul
-    r.register("matmul", "ref", ref.matmul_ref, "jnp.dot oracle")
-    r.register("matmul", "xla", ref.matmul_ref, "XLA dot")
-    r.register(
-        "matmul", "pallas",
-        functools.partial(ops.matmul, backend="pallas"),
-        "blocked MXU matmul",
-    )
-    # attention
-    r.register("attention", "ref", ref.attention_ref, "softmax einsum oracle")
-    r.register("attention", "xla", ref.attention_ref, "XLA attention")
-    r.register(
-        "attention", "pallas",
-        functools.partial(ops.flash_attention, backend="pallas"),
-        "flash attention, VMEM-tiled",
-    )
-    # rmsnorm
-    r.register("rmsnorm", "ref", ref.rmsnorm_ref, "jnp oracle")
-    r.register("rmsnorm", "xla", ref.rmsnorm_ref, "XLA rmsnorm")
-    r.register(
-        "rmsnorm", "pallas",
-        functools.partial(ops.rmsnorm, backend="pallas"),
-        "fused rmsnorm",
-    )
-    # ssd scan
-    r.register("ssd_scan", "ref", functools.partial(ops.ssd_scan, backend="ref"),
-               "sequential scan oracle")
-    r.register("ssd_scan", "xla", functools.partial(ops.ssd_scan, backend="xla"),
-               "chunked SSD, XLA")
-    r.register("ssd_scan", "pallas",
-               functools.partial(ops.ssd_scan, backend="pallas"),
-               "chunked SSD, Pallas intra-chunk")
-    # fft2d
-    r.register("fft2d", "xla", functools.partial(ops.fft2d, backend="xla"),
-               "XLA native fft2")
-    r.register("fft2d", "pallas", functools.partial(ops.fft2d, backend="pallas"),
-               "matmul-DFT on MXU")
-    # lu
-    r.register("lu", "xla", functools.partial(ops.lu, backend="xla"),
-               "blocked LU, XLA trailing update")
-    r.register("lu", "pallas", functools.partial(ops.lu, backend="pallas"),
-               "blocked LU, Pallas schur update")
+    impls = [
+        # matmul
+        ("matmul", "ref", ref.matmul_ref, "jnp.dot oracle"),
+        ("matmul", "xla", ref.matmul_ref, "XLA dot"),
+        ("matmul", "pallas",
+         functools.partial(ops.matmul, backend="pallas"),
+         "blocked MXU matmul"),
+        # attention
+        ("attention", "ref", ref.attention_ref, "softmax einsum oracle"),
+        ("attention", "xla", ref.attention_ref, "XLA attention"),
+        ("attention", "pallas",
+         functools.partial(ops.flash_attention, backend="pallas"),
+         "flash attention, VMEM-tiled"),
+        # rmsnorm
+        ("rmsnorm", "ref", ref.rmsnorm_ref, "jnp oracle"),
+        ("rmsnorm", "xla", ref.rmsnorm_ref, "XLA rmsnorm"),
+        ("rmsnorm", "pallas",
+         functools.partial(ops.rmsnorm, backend="pallas"),
+         "fused rmsnorm"),
+        # ssd scan
+        ("ssd_scan", "ref", functools.partial(ops.ssd_scan, backend="ref"),
+         "sequential scan oracle"),
+        ("ssd_scan", "xla", functools.partial(ops.ssd_scan, backend="xla"),
+         "chunked SSD, XLA"),
+        ("ssd_scan", "pallas",
+         functools.partial(ops.ssd_scan, backend="pallas"),
+         "chunked SSD, Pallas intra-chunk"),
+        # fft2d
+        ("fft2d", "xla", functools.partial(ops.fft2d, backend="xla"),
+         "XLA native fft2"),
+        ("fft2d", "pallas", functools.partial(ops.fft2d, backend="pallas"),
+         "matmul-DFT on MXU"),
+        # lu
+        ("lu", "xla", functools.partial(ops.lu, backend="xla"),
+         "blocked LU, XLA trailing update"),
+        ("lu", "pallas", functools.partial(ops.lu, backend="pallas"),
+         "blocked LU, Pallas schur update"),
+    ]
+    for block, target, fn, note in impls:
+        r.register(block, target, fn, note)
+    return [(block, target, fn) for block, target, fn, _ in impls]
 
 
-_register_all()
+_SHELF_IMPLS = _register_all()
+
+#: Block names registered by this package — the fixed "kernel shelf".
+SHELF_BLOCKS = tuple(sorted({block for block, _, _ in _SHELF_IMPLS}))
+
+#: Registration-time hash of the shelf sources, stamped into the PlanStore
+#: environment fingerprint so a kernel rewrite invalidates stored plans.
+#: Snapshotted from the registration list itself — NOT from live registry
+#: state, which is import-order dependent (e.g. repro.models.attention
+#: re-registers attention/xla at import time).
+SHELF_FINGERPRINT = blocks.implementations_fingerprint(_SHELF_IMPLS)

@@ -1,18 +1,14 @@
-"""Production-side loading of verified offload plans.
+"""Deprecated shim — production-side plan loading moved to ``repro.offload``.
 
-The planner (``repro.core.planner``) searches and persists plans in a
-verification environment; the launch drivers only *load* them.  Loading is
-the zero-search path: no variant is built and nothing is measured — the
-stored block->target mapping is entered via ``blocks.bind`` so every jitted
-step traces under the verified offload pattern.
+The launch drivers now resolve their binding through
+``repro.offload.OffloadSession.attach`` (the zero-search production path);
+``stored_binding`` replaces ``load_plan_bindings``.  These wrappers survive
+only for source compatibility with existing callers.
 """
 
 from __future__ import annotations
 
-import contextlib
-
-from repro.core import blocks
-from repro.core.planner import PlanStore
+from repro.offload import OffloadSession, stored_binding
 
 
 def load_plan_bindings(
@@ -21,40 +17,12 @@ def load_plan_bindings(
     match_fingerprint: bool = True,
     registry=None,
 ) -> dict[str, str] | None:
-    """Fetch a stored plan's block->target mapping, or None when no plan
-    (or a plan verified under a different environment) is available.
-
-    The mapping is validated against the current block registry: a plan
-    naming a block or target that no longer exists (kernel removed or
-    renamed since the plan was verified) is treated as incompatible rather
-    than binding something that would KeyError mid-trace.
-    """
-    if registry is None:
-        registry = blocks.registry
-    plan = PlanStore(plan_dir).load(key, match_fingerprint=match_fingerprint)
-    if plan is None:
-        return None
-    mapping = dict(plan.mapping)
-    for block, target in mapping.items():
-        if target not in registry.targets(block):
-            return None
-    return mapping
+    """Deprecated: use ``repro.offload.stored_binding``."""
+    return stored_binding(
+        plan_dir, key, match_fingerprint=match_fingerprint, registry=registry
+    )
 
 
 def plan_binding_context(plan_dir: str | None, key: str | None):
-    """Binding context for a stored plan; a no-op context when unset or
-    when the plan is missing/incompatible (default bindings then apply)."""
-    if not plan_dir or not key:
-        if plan_dir or key:
-            print(
-                "offload plan ignored: both --plan-dir and --plan-key are "
-                f"required (got plan_dir={plan_dir!r}, plan_key={key!r})"
-            )
-        return contextlib.nullcontext()
-    mapping = load_plan_bindings(plan_dir, key)
-    if mapping is None:
-        print(f"plan '{key}' not found/compatible in {plan_dir}; "
-              "running with default bindings")
-        return contextlib.nullcontext()
-    print(f"bound offload plan '{key}': {mapping} (no re-measurement)")
-    return blocks.bind(mapping)
+    """Deprecated: use ``repro.offload.OffloadSession.attach``."""
+    return OffloadSession.attach(plan_dir, key)

@@ -3,11 +3,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
       --batch 4 --prompt-len 64 --gen 32
 
-Production startup loads a previously verified offload plan (searched and
-saved by the planner in a verification environment) and binds it with zero
-re-measurement:
+Production startup loads a previously verified offload plan (committed by an
+``OffloadSession`` in a verification environment — see
+``repro.offload.zoo``) and binds it with zero re-measurement:
 
-  ... --plan-dir results/plans --plan-key serve:llama3.2-1b
+  ... --plan-dir results/plans --plan-key zoo:llama3.2-1b:prefill
 """
 
 from __future__ import annotations
@@ -20,8 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.plans import load_plan_bindings, plan_binding_context  # noqa: F401 — load_plan_bindings is re-exported API
 from repro.models import lm
+from repro.offload import OffloadSession
+from repro.offload import load_plan_bindings  # noqa: F401 — deprecated re-export
 
 
 def main() -> None:
@@ -48,7 +49,7 @@ def main() -> None:
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
     )
 
-    with plan_binding_context(args.plan_dir, args.plan_key):
+    with OffloadSession.attach(args.plan_dir, args.plan_key):
         prefill = jax.jit(lambda p, b, c: lm.prefill(p, b, cfg, c))
         decode = jax.jit(lambda p, t, c: lm.decode_step(p, t, cfg, c))
 

@@ -9,9 +9,10 @@ mesh via --mesh.
   PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --reduced \
       --steps 100 --batch 8 --seq 128
 
-A previously verified offload plan (planner PlanStore) can be bound at
-startup with --plan-dir/--plan-key — the step is then traced under that
-block->target pattern with zero search or re-measurement.
+A previously verified offload plan (committed by an ``OffloadSession``,
+e.g. the ``repro.offload.zoo`` sweep) can be bound at startup with
+--plan-dir/--plan-key — the step is then traced under that block->target
+pattern with zero search or re-measurement.
 """
 
 from __future__ import annotations
@@ -115,10 +116,10 @@ def main() -> None:
         ckpt_every=args.ckpt_every,
         monitor=monitor,
     )
-    from repro.launch.plans import plan_binding_context
+    from repro.offload import OffloadSession
 
     t0 = time.time()
-    with plan_binding_context(args.plan_dir, args.plan_key):
+    with OffloadSession.attach(args.plan_dir, args.plan_key):
         result = loop.run(state, args.steps)
     dt = time.time() - t0
     tokens = args.steps * args.batch * args.seq

@@ -1,0 +1,57 @@
+"""``repro.offload`` — the public facade for automatic offloading.
+
+One lifecycle object (``OffloadSession``: analyze -> discover -> plan ->
+verify -> commit), one result type (``OffloadResult``), pluggable
+objectives (``Latency``, ``PerfPerWatt``, ``WeightedCost`` over an optional
+``PowerMeter``), persistent plans (``PlanStore``), and the zoo-wide
+``plan_zoo`` sweep.  The historical entry points —
+``OffloadEngine.adapt``, ``measure_block_pattern``, ``run_ga``,
+``launch/plans.py`` — are thin deprecation shims over this package.
+
+Quickstart::
+
+    from repro.offload import OffloadSession
+
+    result = OffloadSession(my_app, args=(x,)).run()
+    y = result.fn(x)                      # accelerated application
+
+    # production startup: bind a committed plan, zero measurement
+    with OffloadSession.attach("results/plans", "zoo:llama3.2-1b:train"):
+        ...
+"""
+
+from repro.core.planner import (  # noqa: F401
+    DEFAULT_DEVICE_WATTS,
+    Latency,
+    MeasurementCache,
+    Objective,
+    PerfPerWatt,
+    Plan,
+    PlanStore,
+    PowerMeter,
+    TimeProportionalPower,
+    WeightedCost,
+    resolve_objective,
+)
+from repro.offload.session import (  # noqa: F401
+    OffloadResult,
+    OffloadSession,
+    StageError,
+    declared_pattern,
+    stored_binding,
+)
+
+#: Deprecated alias for :func:`stored_binding` (historical
+#: ``launch.plans.load_plan_bindings`` name).
+load_plan_bindings = stored_binding
+
+
+def __getattr__(name):
+    # zoo is imported lazily: an eager import here would make the
+    # documented `python -m repro.offload.zoo` CLI double-import the
+    # module under runpy (RuntimeWarning + two module objects).
+    if name in ("plan_zoo", "zoo_key"):
+        from repro.offload import zoo
+
+        return getattr(zoo, name)
+    raise AttributeError(f"module 'repro.offload' has no attribute '{name}'")

@@ -66,6 +66,12 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _strategies
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: builds real model steps; seconds per test"
+    )
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
