@@ -17,6 +17,12 @@ test-fast:
 lint:
 	$(PYTHON) -m ruff check src tests benchmarks examples
 
+# Metering smoke: search two tiny stores in-process under different
+# objectives and diff them (the power/performance trade-off table).
+.PHONY: report
+report:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) -m repro.metering.report --selftest
+
 .PHONY: deps-dev
 deps-dev:
 	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -1,0 +1,73 @@
+"""Measurement-runtime comparison: serial vs device-parallel vs batched.
+
+Times one ExhaustiveSearch over a synthetic space through each
+``repro.metering`` executor.  On a multi-device host DeviceParallelExecutor
+approaches wall = slowest-trial (not sum-of-trials); on this single-device
+container the interesting number is BatchedExecutor's amortisation of
+per-trial dispatch/timer overhead for sub-millisecond variants.
+
+  PYTHONPATH=src python -m benchmarks.executor_compare
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import emit
+
+
+def run(trial_seconds: float = 0.02, axes: int = 3, repeats: int = 1) -> dict:
+    from repro.core.planner import ExhaustiveSearch, MeasurementCache, SubsetSpace
+    from repro.metering import (
+        BatchedExecutor,
+        DeviceParallelExecutor,
+        SerialExecutor,
+    )
+
+    # device discovery initialises the jax backend (~0.5 s once per
+    # process); do it outside the timed windows
+    import jax
+
+    jax.devices()
+
+    names = [f"blk{i}" for i in range(axes)]
+
+    def build(subset):
+        def fn(_x):
+            time.sleep(trial_seconds)
+            return _x
+
+        return fn
+
+    executors = [
+        ("serial", SerialExecutor()),
+        ("device_parallel", DeviceParallelExecutor(max_workers=8)),
+        ("batched", BatchedExecutor(max_fuse=8)),
+    ]
+    out = {}
+    for label, executor in executors:
+        space = SubsetSpace(build, names, tag=f"bench-{label}")
+        cache = MeasurementCache(executor=executor)
+        t0 = time.perf_counter()
+        ExhaustiveSearch().search(space, (0,), cache=cache, repeats=repeats)
+        wall = time.perf_counter() - t0
+        out[label] = wall
+        emit(
+            f"executor.{label}", wall,
+            f"trials={cache.evaluations} trial_s={trial_seconds}",
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trial-seconds", type=float, default=0.02)
+    ap.add_argument("--axes", type=int, default=3)
+    ap.add_argument("--repeats", type=int, default=1)
+    args = ap.parse_args()
+    run(args.trial_seconds, args.axes, args.repeats)
+
+
+if __name__ == "__main__":
+    main()

@@ -19,12 +19,20 @@ def run(n: int = 192, generations: int = 8, population: int = 8,
     space = planner.SubsetSpace.from_genome_builder(
         fourier.build_fft_variant, len(fourier.FFT_STAGES)
     )
+    cache = planner.MeasurementCache()
     rep = planner.GeneticSearch(
         population=population, generations=generations, seed=seed
-    ).search(space, (x,), cache=planner.MeasurementCache(), repeats=1)
+    ).search(space, (x,), cache=cache, repeats=1)
     for gen, speedup in enumerate(rep.generations or []):
         emit(f"fig4.gen{gen}", rep.baseline_seconds / max(speedup, 1e-9),
              f"best_speedup={speedup:.2f}x")
+    # the same curve by trials measured (not generations): Fig. 4's x-axis
+    # when each measurement is the unit of cost
+    from repro.metering import search_trace
+
+    for p in search_trace(cache):
+        emit(f"fig4.trial{p.trial}", p.best_seconds,
+             f"speedup={rep.baseline_seconds / p.best_seconds:.2f}x")
     emit(
         "fig4.final", rep.best.seconds,
         f"best_speedup={rep.best.speedup:.2f}x genome="

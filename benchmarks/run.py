@@ -27,10 +27,18 @@ def main() -> None:
 
     emit_header()
 
-    from benchmarks import fig4_ga_generations, fig5_function_blocks, roofline
+    from benchmarks import (
+        executor_compare,
+        fig4_ga_generations,
+        fig5_function_blocks,
+        roofline,
+    )
 
     # Fig. 4: GA generations vs performance (loop offloading, prior work)
     fig4_ga_generations.run(n=128, generations=6, population=6)
+
+    # Measurement-runtime comparison (repro.metering executors)
+    executor_compare.run(trial_seconds=0.01, axes=3)
 
     # Fig. 5: loop offload vs function-block offload speedups
     fig5_function_blocks.run(

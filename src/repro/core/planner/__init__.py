@@ -27,10 +27,14 @@ factors the common structure into four pieces:
                 joules per call (the follow-up power-saving work,
                 arXiv:2110.11520) fed by a pluggable ``PowerMeter`` with a
                 time-proportional fallback, ``WeightedCost`` blends both.
-  MeasurementCache  shared memoisation keyed by canonical pattern, so no
-                strategy ever re-measures a visited pattern.  Preserves the
-                compile-time / runtime split per trial (paper Fig. 4), and
-                the per-trial energy reading when a PowerMeter is wired.
+  MeasurementCache  shared, thread-safe memoisation keyed by canonical
+                pattern, so no strategy ever re-measures a visited pattern.
+                Preserves the compile-time / runtime split per trial (paper
+                Fig. 4), and the per-trial energy reading + provenance when
+                a PowerMeter is wired.  The timed work itself runs on a
+                pluggable ``repro.metering`` executor (serial /
+                device-parallel / batched) fed through the strategies' bulk
+                ``measure_many`` rounds.
   PlanStore     persistent JSON plans keyed by name + environment
                 fingerprint, so a production process (launch/serve.py,
                 launch/train.py) can load a previously verified plan and

@@ -38,7 +38,17 @@ class PowerMeter:
     cannot produce a reading, e.g. counters unavailable).  Hardware meters
     sample RAPL / board telemetry between the two hooks; the base class is
     a null meter.
+
+    ``provenance`` labels the readings this meter produces — ``"measured"``
+    for hardware counters, ``"estimated"`` for modelled draw — and is
+    stamped onto every ``Measurement`` so mixed rankings stay auditable.
+    ``exclusive`` marks meters whose begin/end window reads a device-global
+    counter: concurrent trials would be attributed each other's energy, so
+    parallel executors serialise the metered sections of such meters.
     """
+
+    provenance: str | None = None
+    exclusive: bool = True
 
     def begin(self) -> None:  # pragma: no cover - trivial
         pass
@@ -54,8 +64,14 @@ class TimeProportionalPower(PowerMeter):
 
     This is exact for a device whose power envelope does not depend on the
     pattern (then PerfPerWatt degenerates to latency) and is the documented
-    stand-in until a counter-backed meter is registered.
+    stand-in until a counter-backed meter is registered.  Counter-backed
+    meters (NVML / RAPL / psutil) live in ``repro.metering.meters`` behind
+    ``metering.autodetect()``.
     """
+
+    provenance = "estimated"
+    # pure function of the trial's own measurement — safe under concurrency
+    exclusive = False
 
     def __init__(self, watts: float = DEFAULT_DEVICE_WATTS) -> None:
         if watts <= 0:

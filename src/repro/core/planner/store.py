@@ -72,6 +72,9 @@ class Plan:
     created_unix: float = 0.0
     objective: str = "latency"  # objective that selected this pattern
     best_energy_joules: float | None = None  # when a PowerMeter was wired
+    # "measured" (hardware counter) vs "estimated" (modelled draw); None
+    # when no meter produced a reading — see repro.metering.meters
+    best_energy_provenance: str | None = None
 
     def to_json(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -170,4 +173,5 @@ def plan_from_report(key: str, space_signature: str, report: Any) -> Plan:
         created_unix=time.time(),
         objective=getattr(report, "objective", "latency"),
         best_energy_joules=getattr(report.best, "energy_joules", None),
+        best_energy_provenance=getattr(report.best, "energy_provenance", None),
     )

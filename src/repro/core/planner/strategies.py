@@ -44,6 +44,7 @@ class PlanTrial:
     speedup: float  # vs the report's baseline
     cached: bool  # satisfied from the MeasurementCache
     energy_joules: float | None = None  # per call, when a PowerMeter is wired
+    energy_provenance: str | None = None  # "measured" | "estimated" | None
     score: float = 0.0  # objective score; lower is better
 
 
@@ -155,17 +156,9 @@ class _Run:
         self._seen: dict[tuple, PlanTrial] = {}
         self.baseline_seconds: float | None = None
 
-    def measure(self, cand: Candidate) -> PlanTrial:
-        key = self.cache.key_for(self.space, cand, self.args)
-        if key in self._seen:
-            return self._seen[key]
-        m, cached = self.cache.measure(
-            self.space,
-            cand,
-            self.args,
-            repeats=self.repeats,
-            min_seconds=self.min_seconds,
-        )
+    def _trial_from(
+        self, cand: Candidate, m: verify.Measurement, cached: bool
+    ) -> PlanTrial:
         base = self.baseline_seconds
         trial = PlanTrial(
             candidate=tuple(cand),
@@ -176,14 +169,46 @@ class _Run:
             speedup=(base / m.seconds) if base else 1.0,
             cached=cached,
             energy_joules=m.energy_joules,
+            energy_provenance=m.energy_provenance,
         )
         trial.score = self.objective.score(trial)
         if base is None:
             self.baseline_seconds = m.seconds
             trial.speedup = 1.0
-        self._seen[key] = trial
-        self.trials.append(trial)
         return trial
+
+    def measure(self, cand: Candidate) -> PlanTrial:
+        return self.measure_many([cand])[0]
+
+    def measure_many(self, cands: Sequence[Candidate]) -> list[PlanTrial]:
+        """Bulk measurement: every not-yet-seen candidate goes to the cache
+        (and through its executor) in one batch, so independent trials can
+        run concurrently.  Returns one trial per candidate, in order."""
+        cands = [tuple(c) for c in cands]
+        fresh: list[Candidate] = []
+        fresh_keys: set[tuple] = set()
+        for cand in cands:
+            key = self.cache.key_for(self.space, cand, self.args)
+            if key not in self._seen and key not in fresh_keys:
+                fresh.append(cand)
+                fresh_keys.add(key)
+        if fresh:
+            measured = self.cache.measure_many(
+                self.space,
+                fresh,
+                self.args,
+                repeats=self.repeats,
+                min_seconds=self.min_seconds,
+            )
+            for cand, (m, cached) in zip(fresh, measured):
+                key = self.cache.key_for(self.space, cand, self.args)
+                trial = self._trial_from(cand, m, cached)
+                self._seen[key] = trial
+                self.trials.append(trial)
+        return [
+            self._seen[self.cache.key_for(self.space, c, self.args)]
+            for c in cands
+        ]
 
     def seconds_of(self, cand: Candidate) -> float:
         return self.measure(cand).seconds
@@ -232,21 +257,24 @@ class SingleThenCombine(SearchStrategy):
         baseline = space.baseline()
         base_t = run.measure(baseline)
 
-        # best improving choice per axis, measured alone ("improving" by the
-        # configured objective, not necessarily by wall time)
-        winners: dict[int, int] = {}
+        # every (axis, choice) measured alone — independent trials, so the
+        # whole round goes to the executor as one batch
+        singles: list[tuple[int, int, Candidate]] = []
         for i, axis in enumerate(space.axes):
-            best_c: int | None = None
-            best_s = base_t.score
             for c in range(1, len(axis.choices)):
                 cand = list(baseline)
                 cand[i] = c
-                t = run.measure(tuple(cand))
-                if t.score < best_s:
-                    best_s = t.score
-                    best_c = c
-            if best_c is not None:
-                winners[i] = best_c
+                singles.append((i, c, tuple(cand)))
+        trials = run.measure_many([cand for _, _, cand in singles])
+
+        # best improving choice per axis ("improving" by the configured
+        # objective, not necessarily by wall time)
+        winners: dict[int, int] = {}
+        best_scores: dict[int, float] = {}
+        for (i, c, _cand), t in zip(singles, trials):
+            if t.score < best_scores.get(i, base_t.score):
+                best_scores[i] = t.score
+                winners[i] = c
 
         if len(winners) >= 2:
             combo = list(baseline)
@@ -365,6 +393,10 @@ class GeneticSearch(SearchStrategy):
         history: list[float] = []
         base = run.baseline_seconds or 1.0
         for _gen in range(self.generations):
+            # measure the whole generation as one batch (the executor may
+            # run its members concurrently); fitness below replays from
+            # the per-run trial table
+            run.measure_many(pop)
             scored = sorted(pop, key=fitness)
             # Fig. 4 curve stays a *speedup* (time ratio) regardless of the
             # objective that ranks the population
@@ -440,8 +472,7 @@ class ExhaustiveSearch(SearchStrategy):
             cands = list(space.enumerate())
         if self.include_baseline:
             run.measure(space.baseline())
-        for cand in cands:
-            run.measure(cand)
+        run.measure_many(cands)
         return run.report(self.name)
 
 
@@ -499,6 +530,5 @@ class CostGuidedSearch(SearchStrategy):
             chosen = [cand for _, cand in ranked]
         else:
             chosen = [cand for _, cand in ranked[: max(self.top_k, 1)]]
-        for cand in chosen:
-            run.measure(cand)
+        run.measure_many(chosen)
         return run.report(self.name)

@@ -41,6 +41,11 @@ class Measurement:
     compile_seconds: float  # first (warm-up) call minus median
     repeats: int
     energy_joules: float | None = None  # per call, when a PowerMeter is wired
+    # "measured" (hardware counter over the trial window) vs "estimated"
+    # (modelled, e.g. time-proportional draw or apportioned from a fused
+    # window); None when no meter produced a reading.  Kept on every
+    # measurement so mixed metered/estimated rankings stay auditable.
+    energy_provenance: str | None = None
 
 
 def measure(

@@ -1,0 +1,26 @@
+"""jax-version compatibility shims for the Pallas TPU shelf.
+
+The shelf targets the current Pallas API, where TPU compiler options are
+``pltpu.CompilerParams``.  On jax 0.4.x the same dataclass is named
+``pltpu.TPUCompilerParams`` — same fields, different name — and kernels
+that reference the new name fail at trace time with ``AttributeError``
+even in ``interpret=True`` mode on CPU.  Route every kernel's compiler
+params through :func:`tpu_compiler_params` so one shelf source supports
+both jax generations.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from jax.experimental.pallas import tpu as pltpu
+
+#: The TPU compiler-params class under whichever name this jax exports it.
+CompilerParams = getattr(
+    pltpu, "CompilerParams", None
+) or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """Construct TPU compiler params on any supported jax version."""
+    return CompilerParams(**kwargs)

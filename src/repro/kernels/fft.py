@@ -28,6 +28,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import tpu_compiler_params
+
 
 def dft_matrix(n: int, sign: float = -1.0) -> tuple[np.ndarray, np.ndarray]:
     """Real/imag planes of the n-point DFT matrix F[k,j] = exp(sign*2pi i kj/n)."""
@@ -98,7 +100,7 @@ def complex_matmul_pallas(
             pltpu.VMEM((block_m, block_n), jnp.float32),
             pltpu.VMEM((block_m, block_n), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -8,6 +8,13 @@ Production startup loads a previously verified offload plan (committed by an
 ``repro.offload.zoo``) and binds it with zero re-measurement:
 
   ... --plan-dir results/plans --plan-key zoo:llama3.2-1b:prefill
+
+With ``--plan-dir`` alone, the stored ``zoo:<arch>:prefill`` /
+``zoo:<arch>:decode`` plans (when present) bind automatically — each phase
+is traced under its own verified pattern.  ``--plan-search`` searches and
+commits missing zoo plans first (using ``--executor`` to parallelise the
+measurement), and ``--meter`` reports the run's real power telemetry with
+measured/estimated provenance.
 """
 
 from __future__ import annotations
@@ -20,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.metering import meter_window, resolve_meter
 from repro.models import lm
 from repro.offload import OffloadSession
 from repro.offload import load_plan_bindings  # noqa: F401 — deprecated re-export
@@ -36,7 +44,21 @@ def main() -> None:
     ap.add_argument("--plan-dir", default=None,
                     help="PlanStore directory with verified offload plans")
     ap.add_argument("--plan-key", default=None,
-                    help="plan to load and bind at startup (zero search)")
+                    help="plan to load and bind at startup (zero search); "
+                         "defaults to the stored zoo:<arch>:prefill and "
+                         "zoo:<arch>:decode plans when present")
+    ap.add_argument("--plan-search", action="store_true",
+                    help="search+commit missing zoo plans for this arch "
+                         "before binding (verification-environment step)")
+    ap.add_argument("--plan-targets", default="ref,xla",
+                    help="targets --plan-search searches over "
+                         "(add 'pallas' on TPU hosts)")
+    ap.add_argument("--executor", default="serial",
+                    help="measurement executor for --plan-search: serial | "
+                         "device-parallel | batched")
+    ap.add_argument("--meter", default="none",
+                    help="power telemetry for the run (and --plan-search): "
+                         "none | auto | time | nvml | rapl | psutil")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -49,28 +71,54 @@ def main() -> None:
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
     )
 
-    with OffloadSession.attach(args.plan_dir, args.plan_key):
-        prefill = jax.jit(lambda p, b, c: lm.prefill(p, b, cfg, c))
-        decode = jax.jit(lambda p, t, c: lm.decode_step(p, t, cfg, c))
+    if args.plan_key:
+        # an explicit key binds both phases; a key without a dir flows into
+        # attach, which warns that both are required — never silently drop
+        # an explicitly requested plan
+        keys = {"prefill": args.plan_key, "decode": args.plan_key}
+    else:
+        from repro.offload.zoo import launch_plan_keys
 
-        cache = lm.init_cache(cfg, args.batch, max_len)
+        keys = launch_plan_keys(
+            args.plan_dir,
+            args.arch,
+            ("prefill", "decode"),
+            search=args.plan_search,
+            targets=tuple(args.plan_targets.split(",")),
+            executor=args.executor,
+            meter=args.meter,
+        )
+    meter = resolve_meter(args.meter)
+
+    cache = lm.init_cache(cfg, args.batch, max_len)
+    # a plan dir whose store has no plan for a phase runs that phase on
+    # default bindings, silently (attach treats dir-without-key as noise);
+    # a key without a dir keeps the dir=None so attach warns about it
+    prefill_dir = args.plan_dir if keys["prefill"] else None
+    decode_dir = args.plan_dir if keys["decode"] else None
+    with OffloadSession.attach(prefill_dir, keys["prefill"]):
+        prefill = jax.jit(lambda p, b, c: lm.prefill(p, b, cfg, c))
         t0 = time.time()
-        logits, cache = prefill(params, {"tokens": prompts}, cache)
-        logits.block_until_ready()
+        with meter_window(meter) as tele_prefill:
+            logits, cache = prefill(params, {"tokens": prompts}, cache)
+            logits.block_until_ready()
         t_prefill = time.time() - t0
 
-        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None].astype(
-            jnp.int32
-        )
-        out_tokens = [tok]
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None].astype(
+        jnp.int32
+    )
+    out_tokens = [tok]
+    with OffloadSession.attach(decode_dir, keys["decode"]):
+        decode = jax.jit(lambda p, t, c: lm.decode_step(p, t, cfg, c))
         t0 = time.time()
-        for _ in range(args.gen - 1):
-            logits, cache = decode(params, tok, cache)
-            tok = jnp.argmax(
-                logits[:, 0, :cfg.vocab_size], axis=-1
-            )[:, None].astype(jnp.int32)
-            out_tokens.append(tok)
-        tok.block_until_ready()
+        with meter_window(meter) as tele_decode:
+            for _ in range(args.gen - 1):
+                logits, cache = decode(params, tok, cache)
+                tok = jnp.argmax(
+                    logits[:, 0, :cfg.vocab_size], axis=-1
+                )[:, None].astype(jnp.int32)
+                out_tokens.append(tok)
+            tok.block_until_ready()
         t_dec = time.time() - t0
 
     gen = jnp.concatenate(out_tokens, axis=1)
@@ -80,6 +128,9 @@ def main() -> None:
         f"decode: {args.gen-1} steps in {t_dec*1e3:.1f} ms "
         f"({(args.gen-1)*args.batch/max(t_dec,1e-9):.1f} tok/s)"
     )
+    if meter is not None:
+        print(f"power: prefill {tele_prefill.summary()}")
+        print(f"power: decode {tele_decode.summary()}")
     print("sample:", np.asarray(gen[0, :16]))
 
 

@@ -12,7 +12,11 @@ mesh via --mesh.
 A previously verified offload plan (committed by an ``OffloadSession``,
 e.g. the ``repro.offload.zoo`` sweep) can be bound at startup with
 --plan-dir/--plan-key — the step is then traced under that block->target
-pattern with zero search or re-measurement.
+pattern with zero search or re-measurement.  With ``--plan-dir`` alone the
+stored ``zoo:<arch>:train`` plan (when present) binds automatically;
+``--plan-search`` searches and commits a missing plan first (using
+``--executor`` to parallelise the measurement), and ``--meter`` reports the
+run's power telemetry with measured/estimated provenance.
 """
 
 from __future__ import annotations
@@ -85,8 +89,42 @@ def main() -> None:
     ap.add_argument("--plan-dir", default=None,
                     help="PlanStore directory with verified offload plans")
     ap.add_argument("--plan-key", default=None,
-                    help="plan to load and bind at startup (zero search)")
+                    help="plan to load and bind at startup (zero search); "
+                         "defaults to the stored zoo:<arch>:train plan "
+                         "when present")
+    ap.add_argument("--plan-search", action="store_true",
+                    help="search+commit a missing zoo:<arch>:train plan "
+                         "before binding (verification-environment step)")
+    ap.add_argument("--plan-targets", default="ref,xla",
+                    help="targets --plan-search searches over "
+                         "(add 'pallas' on TPU hosts)")
+    ap.add_argument("--executor", default="serial",
+                    help="measurement executor for --plan-search: serial | "
+                         "device-parallel | batched")
+    ap.add_argument("--meter", default="none",
+                    help="power telemetry for the run (and --plan-search): "
+                         "none | auto | time | nvml | rapl | psutil")
     args = ap.parse_args()
+
+    from repro.metering import meter_window, resolve_meter
+
+    if args.plan_dir and not args.plan_key:
+        from repro.offload.zoo import launch_plan_keys
+
+        args.plan_key = launch_plan_keys(
+            args.plan_dir,
+            args.arch,
+            ("train",),
+            search=args.plan_search,
+            targets=tuple(args.plan_targets.split(",")),
+            executor=args.executor,
+            meter=args.meter,
+        )["train"]
+        if args.plan_key is None:
+            # dir-without-key is a legitimate "bind defaults when present"
+            # configuration now; don't let attach print noise about it
+            args.plan_dir = None
+    meter = resolve_meter(args.meter)
 
     cfg, data, step_fn, params, opt_state = build(args)
     print(f"arch={cfg.name} params={lm.pm.count_params(lm.build_metas(cfg))/1e6:.1f}M")
@@ -120,7 +158,8 @@ def main() -> None:
 
     t0 = time.time()
     with OffloadSession.attach(args.plan_dir, args.plan_key):
-        result = loop.run(state, args.steps)
+        with meter_window(meter) as tele:
+            result = loop.run(state, args.steps)
     dt = time.time() - t0
     tokens = args.steps * args.batch * args.seq
     print(
@@ -128,6 +167,8 @@ def main() -> None:
         f"final loss {float(last_metrics.get('loss', np.nan)):.4f}, "
         f"{tokens/dt:.0f} tok/s"
     )
+    if meter is not None:
+        print(f"power: train loop {tele.summary()}")
 
 
 if __name__ == "__main__":

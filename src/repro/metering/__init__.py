@@ -1,0 +1,65 @@
+"""``repro.metering`` — the measurement-and-telemetry runtime.
+
+The planner decides *what* to measure; this package owns *how* it is
+measured and what the measurement costs in energy:
+
+  executors   ``SerialExecutor`` / ``DeviceParallelExecutor`` /
+              ``BatchedExecutor`` behind the ``MeasurementExecutor``
+              protocol — plugged into ``MeasurementCache(executor=...)``
+              (or ``OffloadSession(..., executor=...)``) so every search
+              strategy's bulk ``measure_many`` rounds run concurrently on
+              multi-device hosts, or fused for sub-millisecond variants.
+  meters      counter-backed ``PowerMeter``s (``NvmlMeter``, ``RaplMeter``,
+              ``PsutilCpuMeter``) behind :func:`autodetect`, which degrades
+              gracefully to ``TimeProportionalPower``.  Every reading is
+              stamped ``measured`` vs ``estimated`` so mixed rankings stay
+              auditable.
+  report      ``python -m repro.metering.report`` diffs two plan stores
+              into the paper's power/performance trade-off table, and
+              ``search_trace`` reconstructs the Fig. 4 trials-vs-best
+              curve from a report or a measurement cache.
+"""
+
+from repro.core.planner.objectives import (  # noqa: F401
+    DEFAULT_DEVICE_WATTS,
+    PowerMeter,
+    TimeProportionalPower,
+)
+from repro.metering.executors import (  # noqa: F401
+    BatchedExecutor,
+    DeviceParallelExecutor,
+    MeasureJob,
+    MeasurementExecutor,
+    SerialExecutor,
+    resolve_executor,
+)
+from repro.metering.meters import (  # noqa: F401
+    METER_PROBE_ORDER,
+    NvmlMeter,
+    PsutilCpuMeter,
+    RaplMeter,
+    WindowTelemetry,
+    autodetect,
+    meter_window,
+    resolve_meter,
+)
+_REPORT_NAMES = (
+    "DiffRow",
+    "TracePoint",
+    "diff_stores",
+    "render_table",
+    "render_trace",
+    "search_trace",
+    "plan_score",
+)
+
+
+def __getattr__(name):
+    # report is imported lazily: an eager import here would make the
+    # documented `python -m repro.metering.report` CLI double-import the
+    # module under runpy (RuntimeWarning + two module objects).
+    if name in _REPORT_NAMES:
+        from repro.metering import report
+
+        return getattr(report, name)
+    raise AttributeError(f"module 'repro.metering' has no attribute '{name}'")

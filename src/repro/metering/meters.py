@@ -1,0 +1,383 @@
+"""Counter-backed PowerMeter implementations + autodetection.
+
+The follow-up power-saving work (arXiv:2110.11520) ranks offload winners on
+*measured* power draw, not wall time alone.  ``repro.core.planner`` ships
+only ``TimeProportionalPower`` (energy = runtime x nominal watts, provenance
+``"estimated"``); this module adds meters that read real telemetry:
+
+  NvmlMeter       NVIDIA board draw via pynvml, sampled on a background
+                  thread and integrated over the trial window.
+  RaplMeter       Intel RAPL package energy counters
+                  (``/sys/class/powercap/intel-rapl:*/energy_uj``).
+  PsutilCpuMeter  CPU utilisation x TDP model via psutil — a last-resort
+                  *estimate* for hosts with no energy counter at all.
+
+``autodetect()`` probes them in that order and degrades gracefully to
+``TimeProportionalPower``, so ``MeasurementCache(meter=autodetect())`` is
+always safe to write.  Every meter declares its ``provenance``
+(``"measured"`` vs ``"estimated"``) — stamped on each ``Measurement`` so a
+ranking that mixes metered and modelled joules stays auditable — and its
+``exclusive`` flag (device-global counters force parallel executors to
+serialise metered sections).
+
+All meters report energy *per call*: they integrate average draw over the
+begin/end window and charge ``avg_watts x measurement.seconds``, matching
+the ``TimeProportionalPower`` contract.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import glob
+import threading
+import time
+from typing import Any
+
+from repro.core.planner.objectives import (
+    DEFAULT_DEVICE_WATTS,
+    PowerMeter,
+    TimeProportionalPower,
+)
+
+
+class NvmlMeter(PowerMeter):
+    """Sampled NVIDIA board draw integrated over the trial window.
+
+    ``begin`` starts a daemon thread polling
+    ``nvmlDeviceGetPowerUsage`` (milliwatts) every ``1/sample_hz`` seconds;
+    ``end`` stops it, integrates the samples trapezoidally into average
+    watts over the window, and charges ``avg_watts x seconds`` per call.
+    """
+
+    provenance = "measured"
+    exclusive = True  # one board counter answers for every concurrent trial
+
+    def __init__(self, index: int = 0, sample_hz: float = 50.0) -> None:
+        import pynvml
+
+        self._nvml = pynvml
+        pynvml.nvmlInit()
+        self._handle = pynvml.nvmlDeviceGetHandleByIndex(index)
+        self.sample_hz = max(sample_hz, 1.0)
+        self._samples: list[tuple[float, float]] = []
+        self._stop: threading.Event | None = None
+        self._thread: threading.Thread | None = None
+
+    @classmethod
+    def available(cls) -> bool:
+        try:
+            import pynvml
+
+            pynvml.nvmlInit()
+            return pynvml.nvmlDeviceGetCount() > 0
+        except Exception:  # noqa: BLE001 — no driver / no lib / no device
+            return False
+
+    def _sample_loop(self, stop: threading.Event) -> None:
+        period = 1.0 / self.sample_hz
+        while not stop.is_set():
+            try:
+                mw = self._nvml.nvmlDeviceGetPowerUsage(self._handle)
+            except Exception:  # noqa: BLE001 — transient driver error
+                mw = None
+            if mw is not None:
+                self._samples.append((time.perf_counter(), mw / 1000.0))
+            stop.wait(period)
+
+    def begin(self) -> None:
+        # a transient driver error here must degrade this trial's reading
+        # to None, not abort a search that may be hours in
+        self._samples = []
+        with contextlib.suppress(Exception):
+            self._samples.append((time.perf_counter(), self._read_now()))
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._sample_loop, args=(self._stop,), daemon=True
+        )
+        self._thread.start()
+
+    def _read_now(self) -> float:
+        return self._nvml.nvmlDeviceGetPowerUsage(self._handle) / 1000.0
+
+    def end(
+        self, measurement: Any, space: Any = None, candidate: Any = None
+    ) -> float | None:
+        if self._stop is None or self._thread is None:
+            return None
+        self._stop.set()
+        self._thread.join(timeout=2.0)
+        with contextlib.suppress(Exception):
+            self._samples.append((time.perf_counter(), self._read_now()))
+        samples = self._samples
+        self._stop = self._thread = None
+        if len(samples) < 2:
+            return None
+        joules = 0.0
+        for (t0, w0), (t1, w1) in zip(samples, samples[1:]):
+            joules += (w0 + w1) / 2.0 * (t1 - t0)
+        window = samples[-1][0] - samples[0][0]
+        if window <= 0:
+            return None
+        avg_watts = joules / window
+        return avg_watts * measurement.seconds
+
+
+@dataclasses.dataclass
+class _RaplDomain:
+    path: str  # .../energy_uj
+    max_uj: int  # counter wrap point
+
+
+class RaplMeter(PowerMeter):
+    """Intel RAPL package-energy counters under ``/sys/class/powercap``.
+
+    Reads every top-level ``intel-rapl:<n>`` package domain's ``energy_uj``
+    at ``begin`` and ``end``, sums the (wrap-corrected) deltas into window
+    joules, and charges average watts x per-call seconds.
+    """
+
+    provenance = "measured"
+    exclusive = True  # package counter, shared by every core
+
+    GLOB = "/sys/class/powercap/intel-rapl:[0-9]*"
+
+    def __init__(self, domains: list[_RaplDomain] | None = None) -> None:
+        self._domains = domains if domains is not None else self._discover()
+        if not self._domains:
+            raise RuntimeError("no readable RAPL package domains")
+        self._t0 = 0.0
+        self._readings0: list[int] = []
+
+    @classmethod
+    def _discover(cls) -> list[_RaplDomain]:
+        domains = []
+        for d in sorted(glob.glob(cls.GLOB)):
+            # top-level packages only: subdomains (core/uncore/dram) are
+            # nested as intel-rapl:N:M and would double-count the package
+            if d.count(":") != 1:
+                continue
+            try:
+                with open(f"{d}/energy_uj") as f:
+                    int(f.read())
+                try:
+                    with open(f"{d}/max_energy_range_uj") as f:
+                        max_uj = int(f.read())
+                except OSError:
+                    max_uj = 2**62
+                domains.append(_RaplDomain(f"{d}/energy_uj", max_uj))
+            except (OSError, ValueError):  # unreadable (permissions) / junk
+                continue
+        return domains
+
+    @classmethod
+    def available(cls) -> bool:
+        try:
+            return bool(cls._discover())
+        except Exception:  # noqa: BLE001 — defensive: probing must not raise
+            return False
+
+    def _read(self) -> list[int]:
+        out = []
+        for dom in self._domains:
+            with open(dom.path) as f:
+                out.append(int(f.read()))
+        return out
+
+    def begin(self) -> None:
+        self._t0 = time.perf_counter()
+        self._readings0 = self._read()
+
+    def end(
+        self, measurement: Any, space: Any = None, candidate: Any = None
+    ) -> float | None:
+        if not self._readings0:
+            return None
+        window = time.perf_counter() - self._t0
+        try:
+            readings1 = self._read()
+        except OSError:
+            return None
+        uj = 0
+        for dom, r0, r1 in zip(self._domains, self._readings0, readings1):
+            delta = r1 - r0
+            if delta < 0:  # counter wrapped during the window
+                delta += dom.max_uj
+            uj += delta
+        self._readings0 = []
+        if window <= 0:
+            return None
+        avg_watts = uj / 1e6 / window
+        return avg_watts * measurement.seconds
+
+
+class PsutilCpuMeter(PowerMeter):
+    """CPU-utilisation x TDP model (psutil) — an *estimate*, not a counter.
+
+    Utilisation is taken from *this process's* CPU time over the
+    begin/end window (``Process.cpu_times``), normalised by core count —
+    trials run in-process, so this attributes exactly the trial's own
+    compute, and it keeps working in containers whose host-wide
+    ``/proc/stat`` is masked (where ``cpu_percent`` reads 0).  Charges
+    ``idle_watts + tdp_watts x util`` x per-call seconds.  The idle floor
+    keeps sub-tick windows (process CPU time advances in ~10 ms ticks)
+    from reading 0 J — a machine never draws nothing.  Last resort before
+    the time-proportional fallback: it at least responds to how hard the
+    trial drove the CPU.
+    """
+
+    provenance = "estimated"
+    exclusive = True  # one process-wide window at a time
+
+    def __init__(
+        self,
+        tdp_watts: float = DEFAULT_DEVICE_WATTS,
+        idle_watts: float = 10.0,
+    ) -> None:
+        import psutil
+
+        if tdp_watts <= 0:
+            raise ValueError("tdp_watts must be positive")
+        self._process = psutil.Process()
+        self._ncpu = psutil.cpu_count() or 1
+        self.tdp_watts = tdp_watts
+        self.idle_watts = idle_watts
+        self._t0 = 0.0
+        self._busy0: float | None = None
+
+    @classmethod
+    def available(cls) -> bool:
+        try:
+            import psutil
+
+            psutil.Process().cpu_times()
+            return True
+        except Exception:  # noqa: BLE001 — no psutil / no proc access
+            return False
+
+    def _busy(self) -> float:
+        t = self._process.cpu_times()
+        return t.user + t.system
+
+    def begin(self) -> None:
+        self._t0 = time.perf_counter()
+        self._busy0 = self._busy()
+
+    def end(
+        self, measurement: Any, space: Any = None, candidate: Any = None
+    ) -> float | None:
+        if self._busy0 is None:
+            return None
+        window = time.perf_counter() - self._t0
+        busy = self._busy() - self._busy0
+        self._busy0 = None
+        if window <= 0:
+            return None
+        util = min(busy / (window * self._ncpu), 1.0)
+        watts = self.idle_watts + self.tdp_watts * util
+        return watts * measurement.seconds
+
+
+#: Autodetection order: hardware counters first, models last.
+METER_PROBE_ORDER: tuple[tuple[str, type], ...] = (
+    ("nvml", NvmlMeter),
+    ("rapl", RaplMeter),
+    ("psutil", PsutilCpuMeter),
+)
+
+
+def autodetect(fallback_watts: float = DEFAULT_DEVICE_WATTS) -> PowerMeter:
+    """Best available power meter for this host.
+
+    Probes ``nvml -> rapl -> psutil`` and degrades gracefully to
+    ``TimeProportionalPower(fallback_watts)`` — the returned meter is
+    always usable, so callers never need an availability check of their
+    own.
+    """
+    for _name, cls in METER_PROBE_ORDER:
+        try:
+            if cls.available():
+                return cls()
+        except Exception:  # noqa: BLE001 — a broken probe must not abort
+            continue
+    return TimeProportionalPower(watts=fallback_watts)
+
+
+@dataclasses.dataclass
+class WindowTelemetry:
+    """What :func:`meter_window` observed: whole-window energy."""
+
+    seconds: float = 0.0
+    joules: float | None = None
+    watts: float | None = None
+    provenance: str | None = None
+
+    def summary(self) -> str:
+        if self.joules is None:
+            return f"{self.seconds:.2f}s (no power reading)"
+        tag = self.provenance or "unknown"
+        return (
+            f"{self.seconds:.2f}s, {self.joules:.1f} J "
+            f"({self.watts:.1f} W avg, {tag})"
+        )
+
+
+@contextlib.contextmanager
+def meter_window(meter: PowerMeter | None):
+    """Meter an arbitrary code window (production run telemetry).
+
+    Yields a ``WindowTelemetry`` filled in at exit — the launch drivers use
+    this to report the joules of a whole serve/train run, with the same
+    provenance marking the planner stamps on search trials.  A None meter
+    yields an empty telemetry (timing only).
+    """
+    import time as _time
+
+    from repro.core.verify import Measurement
+
+    tele = WindowTelemetry()
+    t0 = _time.perf_counter()
+    if meter is not None:
+        meter.begin()
+    try:
+        yield tele
+    finally:
+        tele.seconds = _time.perf_counter() - t0
+        if meter is not None:
+            window = Measurement(
+                seconds=max(tele.seconds, 1e-9), compile_seconds=0.0, repeats=1
+            )
+            tele.joules = meter.end(window)
+            if tele.joules is not None:
+                tele.watts = tele.joules / max(tele.seconds, 1e-9)
+                tele.provenance = getattr(meter, "provenance", None)
+
+
+def resolve_meter(meter: "PowerMeter | str | None") -> PowerMeter | None:
+    """Accept a meter instance, a name, or None.
+
+    Names: ``"auto"`` (autodetect), ``"none"`` (no metering),
+    ``"time"``/``"time-proportional"``, ``"nvml"``, ``"rapl"``,
+    ``"psutil"``.  Asking for a specific unavailable meter raises rather
+    than silently substituting — explicit requests should fail loudly.
+    """
+    if meter is None:
+        return None
+    if not isinstance(meter, str):
+        return meter
+    name = meter.lower()
+    if name == "none":
+        return None
+    if name == "auto":
+        return autodetect()
+    if name in ("time", "time-proportional", "time_proportional"):
+        return TimeProportionalPower()
+    for probe_name, cls in METER_PROBE_ORDER:
+        if name == probe_name:
+            if not cls.available():
+                raise RuntimeError(
+                    f"power meter '{name}' is not available on this host"
+                )
+            return cls()
+    known = ["auto", "none", "time"] + [n for n, _ in METER_PROBE_ORDER]
+    raise KeyError(f"unknown power meter '{meter}'; known: {known}")

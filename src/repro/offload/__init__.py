@@ -33,6 +33,14 @@ from repro.core.planner import (  # noqa: F401
     WeightedCost,
     resolve_objective,
 )
+from repro.metering import (  # noqa: F401
+    BatchedExecutor,
+    DeviceParallelExecutor,
+    SerialExecutor,
+    autodetect,
+    resolve_executor,
+    resolve_meter,
+)
 from repro.offload.session import (  # noqa: F401
     OffloadResult,
     OffloadSession,
@@ -50,7 +58,7 @@ def __getattr__(name):
     # zoo is imported lazily: an eager import here would make the
     # documented `python -m repro.offload.zoo` CLI double-import the
     # module under runpy (RuntimeWarning + two module objects).
-    if name in ("plan_zoo", "zoo_key"):
+    if name in ("plan_zoo", "zoo_key", "default_plan_key"):
         from repro.offload import zoo
 
         return getattr(zoo, name)

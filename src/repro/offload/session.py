@@ -160,6 +160,7 @@ class OffloadSession:
         key: str | None = None,
         cache: MeasurementCache | None = None,
         meter: Any = None,
+        executor: Any = None,
         engine: Any = None,
         registry: Any = None,
         patterns: Sequence[Mapping[str, str]] | None = None,
@@ -175,17 +176,21 @@ class OffloadSession:
         self.strategy = strategy or SingleThenCombine()
         self.store = PlanStore(store) if isinstance(store, str) else store
         self.key = key
+        self._owns_cache = cache is None
         if cache is None:
-            cache = MeasurementCache(meter=meter)
-        elif meter is not None:
-            if cache.meter is not None and cache.meter is not meter:
-                raise ValueError(
-                    "the shared MeasurementCache already carries a "
-                    "different PowerMeter; wire the meter into the cache "
-                    "itself (MeasurementCache(meter=...)) or give this "
-                    "session its own cache"
-                )
-            cache.meter = meter
+            cache = MeasurementCache(meter=meter, executor=executor)
+        else:
+            if meter is not None:
+                if cache.meter is not None and cache.meter is not meter:
+                    raise ValueError(
+                        "the shared MeasurementCache already carries a "
+                        "different PowerMeter; wire the meter into the cache "
+                        "itself (MeasurementCache(meter=...)) or give this "
+                        "session its own cache"
+                    )
+                cache.meter = meter
+            if executor is not None:
+                self._set_cache_executor(cache, executor)
         self.cache = cache
         self.registry = registry or blocks_mod.registry
         self.repeats = repeats
@@ -224,6 +229,30 @@ class OffloadSession:
         self._from_store = False
         self._numerics_ok: bool | None = None
         self._built_fn: Callable[..., Any] | None = None
+
+    def _set_cache_executor(self, cache: MeasurementCache, executor: Any) -> None:
+        """Install an executor on a *shared* cache, refusing to silently
+        displace a different one another session relies on (mirrors the
+        PowerMeter conflict guard above)."""
+        from repro.metering.executors import resolve_executor
+
+        executor = resolve_executor(executor)
+        current = cache.executor
+        # equivalent configuration counts as the same executor: two
+        # resolve_executor("serial") calls yield distinct-but-equal
+        # instances and must not be treated as a conflict
+        same = current is None or current is executor or (
+            type(current) is type(executor)
+            and current.__dict__ == executor.__dict__
+        )
+        if not same:
+            raise ValueError(
+                "the shared MeasurementCache already carries a different "
+                "executor; wire the executor into the cache itself "
+                "(MeasurementCache(executor=...)) or give this session "
+                "its own cache"
+            )
+        cache.executor = executor
 
     # -- stage machinery -------------------------------------------------------
     def _require(self, stage: str, prerequisite: str) -> None:
@@ -298,16 +327,26 @@ class OffloadSession:
         return found
 
     # -- Step 3 ----------------------------------------------------------------
-    def plan(self) -> Plan:
+    def plan(self, executor: Any = None) -> Plan:
         """Store-first measured search: a compatible stored plan (same
         space signature, same objective) short-cuts to zero measurements,
         otherwise the strategy searches the space and ranks candidates
         with the session objective.
 
+        ``executor`` (a ``repro.metering`` executor instance or name)
+        overrides how this search's trials are timed — e.g.
+        ``plan(executor=DeviceParallelExecutor())`` measures independent
+        candidates concurrently, one per device.
+
         One plan-lifecycle policy exists — ``Planner.plan`` — and this
         stage delegates to it; persistence is deferred to ``commit``.
         """
         self._require("plan", "discover")
+        if executor is not None:
+            if self._owns_cache:
+                self.cache.executor = executor
+            else:
+                self._set_cache_executor(self.cache, executor)
         planner = Planner(
             self.space,
             strategy=self.strategy,

@@ -42,8 +42,85 @@ _BLOCKS_BY_LAYER_KIND = {
 ZOO_KINDS = ("train", "prefill", "decode")
 
 
+def canonical_arch(arch: str) -> str:
+    """Registry spelling of an arch name (``llama3.2_1b`` ->
+    ``llama3.2-1b``); unknown names pass through unchanged so non-zoo
+    callers (e.g. the report selftest) can use arbitrary labels."""
+    try:
+        from repro.configs import get_config
+
+        return get_config(arch).name
+    except Exception:  # noqa: BLE001 — unknown arch: keep caller's label
+        return arch
+
+
 def zoo_key(arch: str, kind: str) -> str:
-    return f"zoo:{arch}:{kind}"
+    # canonicalised so every spelling a driver accepts (get_config is
+    # permissive) addresses the same stored plan
+    return f"zoo:{canonical_arch(arch)}:{kind}"
+
+
+def default_plan_key(
+    plan_dir: str | None,
+    arch: str,
+    kind: str,
+    match_fingerprint: bool = False,
+) -> str | None:
+    """``zoo:<arch>:<kind>`` when the store actually holds that plan, else
+    None — lets launch drivers default ``--plan-key`` without emitting
+    "plan not found" noise on hosts that never ran the zoo sweep.
+
+    By default presence only (fingerprint/registry compatibility is still
+    enforced at bind time by ``OffloadSession.attach``).  Pass
+    ``match_fingerprint=True`` when deciding whether a *search* is needed:
+    a plan verified under a different environment would be rejected at
+    bind time, so for search purposes it counts as missing.
+    """
+    if not plan_dir:
+        return None
+    key = zoo_key(arch, kind)
+    plan = PlanStore(plan_dir).load(key, match_fingerprint=match_fingerprint)
+    return None if plan is None else key
+
+
+def launch_plan_keys(
+    plan_dir: str | None,
+    arch: str,
+    kinds: Sequence[str],
+    *,
+    search: bool = False,
+    targets: Sequence[str] | None = None,
+    executor: Any = None,
+    meter: Any = None,
+) -> dict[str, str | None]:
+    """The launch drivers' zoo-default flow, in one place: optionally
+    search+commit any cell whose stored plan is absent **or verified under
+    a different environment** (it would be rejected at bind time, so for
+    search purposes it counts as missing), then return each kind's
+    bindable default key (presence-checked; attach still enforces
+    compatibility)."""
+    if not plan_dir:
+        return {kind: None for kind in kinds}
+    if search:
+        missing = [
+            kind
+            for kind in kinds
+            if default_plan_key(plan_dir, arch, kind, match_fingerprint=True)
+            is None
+        ]
+        if missing:
+            print(f"searching offload plans for {arch}: {missing}")
+            plan_zoo(
+                plan_dir,
+                [(arch, kind) for kind in missing],
+                targets=targets,
+                executor=executor,
+                meter=meter,
+                quiet=False,
+            )
+    return {
+        kind: default_plan_key(plan_dir, arch, kind) for kind in kinds
+    }
 
 
 def _cell_blocks(
@@ -158,6 +235,8 @@ def plan_zoo(
     targets: Sequence[str] | None = None,
     objective: Objective | str | None = None,
     strategy: SearchStrategy | None = None,
+    executor: Any = None,
+    meter: Any = None,
     repeats: int = 1,
     min_seconds: float = 0.0,
     registry: Any = None,
@@ -170,7 +249,10 @@ def plan_zoo(
 
     ``cells`` defaults to every registered architecture x every step kind.
     Already-stored compatible plans short-cut to zero measurements (pass
-    ``force_search=True`` to re-measure).  Returns
+    ``force_search=True`` to re-measure).  ``executor`` / ``meter`` select
+    the ``repro.metering`` measurement executor (e.g. ``device_parallel``
+    on multi-device hosts) and power meter (``"auto"`` autodetects, with
+    provenance recorded on every trial).  Returns
     ``{(arch, kind): OffloadResult}``; cells whose step cannot be built or
     measured on this host are skipped with a ``UserWarning`` (regardless
     of ``quiet``, which only silences progress lines) rather than
@@ -178,9 +260,11 @@ def plan_zoo(
     """
     from repro.configs import ARCH_NAMES
     from repro.core import blocks as blocks_mod
+    from repro.metering import resolve_meter
 
     registry = registry or blocks_mod.registry
     store = PlanStore(store) if isinstance(store, str) else store
+    meter = resolve_meter(meter)
     if cells is None:
         cells = [(a, k) for a in ARCH_NAMES for k in ZOO_KINDS]
 
@@ -210,6 +294,8 @@ def plan_zoo(
                 strategy=strategy,
                 store=store,
                 key=zoo_key(arch, kind),
+                meter=meter,
+                executor=executor,
                 repeats=repeats,
                 min_seconds=min_seconds,
                 registry=registry,
@@ -253,6 +339,12 @@ def main() -> None:
                          "(add 'pallas' on TPU hosts)")
     ap.add_argument("--objective", default="latency",
                     help="latency | perf_per_watt")
+    ap.add_argument("--executor", default="serial",
+                    help="measurement executor: serial | device-parallel "
+                         "| batched (repro.metering)")
+    ap.add_argument("--meter", default="none",
+                    help="power meter: none | auto | time | nvml | rapl | "
+                         "psutil (provenance recorded per trial)")
     ap.add_argument("--repeats", type=int, default=1)
     ap.add_argument("--force", action="store_true",
                     help="re-search even when a stored plan exists")
@@ -274,6 +366,8 @@ def main() -> None:
         seq=args.seq,
         targets=tuple(args.targets.split(",")),
         objective=args.objective,
+        executor=args.executor,
+        meter=args.meter,
         repeats=args.repeats,
         verify=args.verify,
         force_search=args.force,

@@ -1,0 +1,599 @@
+"""repro.metering: executors, meters, cache thread-safety, store-diff report.
+
+Timing-sensitive equivalence tests use sleep-based variants with >=5 ms
+gaps between candidates so median-of-1 measurements rank deterministically
+under any executor.
+"""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro.core.planner import (
+    ExhaustiveSearch,
+    GeneticSearch,
+    MeasurementCache,
+    Plan,
+    PlanStore,
+    SingleThenCombine,
+    SubsetSpace,
+    TimeProportionalPower,
+    environment_fingerprint,
+)
+from repro.core.planner.objectives import PowerMeter
+from repro.metering import (
+    BatchedExecutor,
+    DeviceParallelExecutor,
+    MeasureJob,
+    SerialExecutor,
+    diff_stores,
+    render_table,
+    resolve_executor,
+    resolve_meter,
+    search_trace,
+)
+from repro.metering import meters as meters_mod
+from repro.metering import report as report_mod
+from repro.offload import OffloadSession
+
+COSTS = {
+    frozenset(): 0.040,
+    frozenset({"a"}): 0.020,
+    frozenset({"b"}): 0.030,
+    frozenset({"a", "b"}): 0.008,
+}
+
+
+def sleep_space(costs=None, names=("a", "b"), tag="metering"):
+    costs = COSTS if costs is None else costs
+
+    def build(subset):
+        seconds = costs[frozenset(subset)]
+
+        def fn(_x):
+            time.sleep(seconds)
+            return _x
+
+        return fn
+
+    return SubsetSpace(build, list(names), tag=tag)
+
+
+# -- executors ----------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "executor",
+    [
+        SerialExecutor(),
+        DeviceParallelExecutor(max_workers=4),
+        BatchedExecutor(max_fuse=3),
+    ],
+    ids=["serial", "device_parallel", "batched"],
+)
+def test_executor_equivalence_same_winner(executor):
+    """Acceptance: every executor reproduces the serial search's winner and
+    measures the same candidate set."""
+    space = sleep_space()
+    session = OffloadSession(
+        space, args=(0,), strategy=SingleThenCombine(), repeats=1,
+        executor=executor,
+    )
+    session.analyze()
+    session.discover()
+    plan = session.plan()
+    assert plan.pattern == ("a", "b")
+    # paper trial set: baseline + each single + the combination
+    assert session.cache.evaluations == 4
+
+
+def test_session_plan_accepts_executor_override():
+    space = sleep_space(tag="override")
+    session = OffloadSession(
+        space, args=(0,), strategy=SingleThenCombine(), repeats=1
+    )
+    session.analyze()
+    session.discover()
+    plan = session.plan(executor=DeviceParallelExecutor(max_workers=2))
+    assert plan.pattern == ("a", "b")
+    assert type(session.cache.executor).__name__ == "DeviceParallelExecutor"
+
+
+def test_ga_same_winner_parallel_vs_serial():
+    results = {}
+    for name, executor in [
+        ("serial", None),
+        ("parallel", DeviceParallelExecutor(max_workers=4)),
+    ]:
+        space = sleep_space(tag=f"ga-{name}")
+        rep = GeneticSearch(
+            population=4, generations=3, seed=7
+        ).search(
+            space,
+            (0,),
+            cache=MeasurementCache(executor=executor),
+            repeats=1,
+        )
+        results[name] = rep.best.pattern
+    assert results["serial"] == results["parallel"]
+
+
+def test_device_parallel_actually_overlaps_trials():
+    """4 independent 50 ms candidates across 4 workers must take well under
+    4x the serial wall time."""
+    costs = {
+        frozenset(): 0.05,
+        frozenset({"x"}): 0.05,
+        frozenset({"y"}): 0.05,
+        frozenset({"x", "y"}): 0.05,
+    }
+    space = sleep_space(costs, names=("x", "y"), tag="overlap")
+    cache = MeasurementCache(executor=DeviceParallelExecutor(max_workers=4))
+    cands = list(space.enumerate())
+    t0 = time.perf_counter()
+    out = cache.measure_many(space, cands, (0,), repeats=1, warmup=0)
+    wall = time.perf_counter() - t0
+    assert len(out) == 4 and all(not cached for _, cached in out)
+    assert wall < 0.15  # serial would be >= 0.20 s
+
+
+def test_batched_executor_apportions_by_variant():
+    slow = MeasureJob(fn=lambda: time.sleep(0.03), args=(), repeats=1, warmup=0)
+    fast = MeasureJob(fn=lambda: time.sleep(0.005), args=(), repeats=1, warmup=0)
+    m_slow, m_fast = BatchedExecutor().run([slow, fast])
+    assert m_slow.seconds > 2 * m_fast.seconds
+
+
+def test_batched_executor_marks_apportioned_energy_estimated():
+    class CounterMeter(PowerMeter):
+        provenance = "measured"
+
+        def end(self, measurement, space=None, candidate=None):
+            return 5.0 * measurement.seconds
+
+    jobs = [
+        MeasureJob(fn=lambda: time.sleep(0.004), args=(), repeats=1, warmup=0)
+        for _ in range(2)
+    ]
+    for m in BatchedExecutor().run(jobs, meter=CounterMeter()):
+        assert m.energy_joules is not None and m.energy_joules > 0
+        # fused-window attribution is a model, never a direct counter read
+        assert m.energy_provenance == "estimated"
+
+
+def test_shared_cache_executor_conflict_raises():
+    shared = MeasurementCache(executor=BatchedExecutor())
+    space = sleep_space(tag="conflict")
+    with pytest.raises(ValueError):
+        OffloadSession(
+            space, args=(0,), cache=shared,
+            executor=DeviceParallelExecutor(),
+        )
+    session = OffloadSession(space, args=(0,), cache=shared)
+    session.analyze()
+    session.discover()
+    with pytest.raises(ValueError):
+        session.plan(executor=DeviceParallelExecutor())
+
+
+def test_shared_cache_equal_executor_is_not_a_conflict():
+    """Two name-resolved executors with identical configuration are the
+    same executor, not a conflict (fresh instances compare by config)."""
+    shared = MeasurementCache(executor="serial")
+    space = sleep_space(tag="equal-exec")
+    session = OffloadSession(space, args=(0,), cache=shared, executor="serial")
+    session.analyze()
+    session.discover()
+    session.plan(executor=SerialExecutor())  # still equal — no error
+    with pytest.raises(ValueError):
+        session.plan(executor=BatchedExecutor())
+
+
+def test_zoo_key_canonicalises_arch_spelling():
+    from repro.offload.zoo import zoo_key
+
+    assert zoo_key("llama3.2_1b", "train") == "zoo:llama3.2-1b:train"
+    assert zoo_key("llama3.2-1b", "train") == "zoo:llama3.2-1b:train"
+    # unknown labels pass through (report selftest et al.)
+    assert zoo_key("selftest", "app") == "zoo:selftest:app"
+
+
+def test_cache_rejects_short_executor_return():
+    class ShortExecutor:
+        def run(self, jobs, meter=None):
+            return []
+
+    space = sleep_space(tag="short-exec")
+    cache = MeasurementCache(executor=ShortExecutor())
+    with pytest.raises(RuntimeError, match="one Measurement per job"):
+        cache.measure(space, (0, 0), (0,), repeats=1, warmup=0)
+    # the failed claim was released: a good executor can take over
+    cache.executor = None
+    m, cached = cache.measure(space, (0, 0), (0,), repeats=1, warmup=0)
+    assert not cached and m.seconds > 0
+
+
+def test_report_cli_fail_empty(tmp_path, capsys):
+    (tmp_path / "a").mkdir()
+    (tmp_path / "b").mkdir()
+    assert report_mod.main(
+        [str(tmp_path / "a"), str(tmp_path / "b"), "--fail-empty"]
+    ) == 1
+    assert report_mod.main([str(tmp_path / "a"), str(tmp_path / "b")]) == 0
+    capsys.readouterr()
+
+
+def test_batched_executor_candidate_meter_degrades_not_crashes():
+    """A meter whose end() requires the candidate cannot attribute a fused
+    multi-variant window: the group's energy degrades to None instead of
+    aborting the search; single-job groups still get full attribution."""
+
+    class CandidateWatts(PowerMeter):
+        provenance = "measured"
+        exclusive = False
+
+        def end(self, measurement, space=None, candidate=None):
+            return (10.0 + sum(candidate)) * measurement.seconds
+
+    space = sleep_space(
+        {
+            frozenset(): 0.002,
+            frozenset({"a"}): 0.002,
+            frozenset({"b"}): 0.002,
+            frozenset({"a", "b"}): 0.002,
+        },
+        tag="cand-meter",
+    )
+    cache = MeasurementCache(
+        meter=CandidateWatts(), executor=BatchedExecutor(max_fuse=4)
+    )
+    out = cache.measure_many(
+        space, list(space.enumerate()), (0,), repeats=1, warmup=0
+    )
+    assert all(m.energy_joules is None for m, _ in out)  # fused: no claim
+    solo = MeasurementCache(
+        meter=CandidateWatts(), executor=BatchedExecutor(max_fuse=1)
+    )
+    (m, _), = solo.measure_many(space, [(1, 0)], (0,), repeats=1, warmup=0)
+    assert m.energy_joules == pytest.approx(11.0 * m.seconds)
+
+
+def test_exclusive_meter_windows_never_interleave_across_threads():
+    """The serialisation lock lives on the meter, so concurrent
+    measure_many callers sharing one cache cannot interleave an exclusive
+    meter's begin/end windows (stateful counters would corrupt)."""
+
+    class StrictMeter(PowerMeter):
+        provenance = "measured"
+        exclusive = True
+
+        def __init__(self):
+            self.open = False
+            self.violations = 0
+
+        def begin(self):
+            if self.open:
+                self.violations += 1
+            self.open = True
+
+        def end(self, measurement, space=None, candidate=None):
+            if not self.open:
+                self.violations += 1
+            self.open = False
+            return 1.0
+
+    meter = StrictMeter()
+    space = sleep_space(
+        {
+            frozenset(): 0.001,
+            frozenset({"a"}): 0.001,
+            frozenset({"b"}): 0.001,
+            frozenset({"a", "b"}): 0.001,
+        },
+        tag="strict-meter",
+    )
+    cache = MeasurementCache(meter=meter)
+    cands = list(space.enumerate())
+    threads = [
+        threading.Thread(
+            target=lambda s=s: cache.measure_many(
+                space, cands, (s,), repeats=1, warmup=0
+            )
+        )
+        for s in range(6)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert meter.violations == 0
+
+
+def test_resolve_executor_names_and_errors():
+    assert isinstance(resolve_executor(None), SerialExecutor)
+    assert isinstance(resolve_executor("serial"), SerialExecutor)
+    assert isinstance(
+        resolve_executor("device-parallel"), DeviceParallelExecutor
+    )
+    assert isinstance(resolve_executor("batched"), BatchedExecutor)
+    with pytest.raises(KeyError):
+        resolve_executor("warp-drive")
+    with pytest.raises(TypeError):
+        resolve_executor(object())
+
+
+# -- cache thread-safety ------------------------------------------------------
+
+
+def test_cache_concurrent_measure_exact_accounting():
+    """N threads hammering overlapping candidates: every candidate is
+    measured exactly once, and hits+misses add up with no lost updates."""
+    space = sleep_space(
+        {
+            frozenset(): 0.002,
+            frozenset({"a"}): 0.002,
+            frozenset({"b"}): 0.002,
+            frozenset({"a", "b"}): 0.002,
+        },
+        tag="race",
+    )
+    cache = MeasurementCache()
+    cands = list(space.enumerate())
+    n_threads, per_thread = 8, 12
+    errors = []
+
+    def hammer(seed):
+        try:
+            for i in range(per_thread):
+                cand = cands[(seed + i) % len(cands)]
+                m, _cached = cache.measure(
+                    space, cand, (0,), repeats=1, warmup=0
+                )
+                assert m.seconds > 0
+        except Exception as e:  # noqa: BLE001 — surfaced below
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=hammer, args=(s,)) for s in range(n_threads)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(cache) == len(cands)
+    assert cache.misses == len(cands)  # nothing measured twice
+    assert cache.hits + cache.misses == n_threads * per_thread
+
+
+def test_cache_records_preserve_measurement_order():
+    space = sleep_space(tag="order")
+    cache = MeasurementCache()
+    order = [(0, 0), (1, 1), (0, 1)]
+    for cand in order:
+        cache.measure(space, cand, (0,), repeats=1, warmup=0)
+    recs = cache.records()
+    assert [r.seq for r in recs] == [0, 1, 2]
+    assert len(recs) == 3
+
+
+# -- meters -------------------------------------------------------------------
+
+
+def test_autodetect_fallback_order(monkeypatch):
+    calls = []
+
+    def avail(name, result):
+        def probe():
+            calls.append(name)
+            return result
+
+        return probe
+
+    monkeypatch.setattr(
+        meters_mod.NvmlMeter, "available", avail("nvml", False)
+    )
+    monkeypatch.setattr(
+        meters_mod.RaplMeter, "available", avail("rapl", False)
+    )
+    monkeypatch.setattr(
+        meters_mod.PsutilCpuMeter, "available", avail("psutil", False)
+    )
+    meter = meters_mod.autodetect()
+    assert isinstance(meter, TimeProportionalPower)
+    assert calls == ["nvml", "rapl", "psutil"]  # hardware counters first
+
+
+def test_autodetect_stops_at_first_available(monkeypatch):
+    monkeypatch.setattr(meters_mod.NvmlMeter, "available", lambda: False)
+    monkeypatch.setattr(meters_mod.RaplMeter, "available", lambda: True)
+    monkeypatch.setattr(
+        meters_mod.RaplMeter, "__init__", lambda self: None
+    )
+    assert isinstance(meters_mod.autodetect(), meters_mod.RaplMeter)
+
+
+def test_resolve_meter_names():
+    assert resolve_meter(None) is None
+    assert resolve_meter("none") is None
+    assert isinstance(resolve_meter("time"), TimeProportionalPower)
+    tp = TimeProportionalPower()
+    assert resolve_meter(tp) is tp
+    with pytest.raises(KeyError):
+        resolve_meter("geiger")
+
+
+def test_resolve_meter_explicit_unavailable_raises(monkeypatch):
+    monkeypatch.setattr(meters_mod.NvmlMeter, "available", lambda: False)
+    with pytest.raises(RuntimeError):
+        resolve_meter("nvml")
+
+
+@pytest.mark.skipif(
+    not meters_mod.PsutilCpuMeter.available(), reason="psutil unavailable"
+)
+def test_psutil_meter_produces_estimate():
+    meter = meters_mod.PsutilCpuMeter(tdp_watts=100.0, idle_watts=10.0)
+    meter.begin()
+    t0 = time.perf_counter()
+    x = 0
+    while time.perf_counter() - t0 < 0.05:
+        x += 1
+    from repro.core.verify import Measurement
+
+    m = Measurement(seconds=0.05, compile_seconds=0.0, repeats=1)
+    joules = meter.end(m)
+    assert joules is not None and joules > 0
+    assert meter.provenance == "estimated"
+
+
+def test_provenance_threads_measurement_to_plan(tmp_path):
+    space = sleep_space(tag="provenance")
+    session = OffloadSession(
+        space,
+        args=(0,),
+        strategy=ExhaustiveSearch(),
+        meter=TimeProportionalPower(watts=100.0),
+        store=str(tmp_path),
+        key="zoo:prov:train",
+        repeats=1,
+    )
+    result = session.run(verify=False, build=False)
+    assert all(t.energy_provenance == "estimated" for t in result.trials)
+    stored = PlanStore(str(tmp_path)).load("zoo:prov:train")
+    assert stored is not None
+    assert stored.best_energy_provenance == "estimated"
+    assert stored.best_energy_joules == pytest.approx(
+        stored.best_seconds * 100.0
+    )
+
+
+def test_meter_window_telemetry():
+    from repro.metering import meter_window
+
+    with meter_window(TimeProportionalPower(watts=50.0)) as tele:
+        time.sleep(0.02)
+    assert tele.seconds >= 0.02
+    assert tele.joules == pytest.approx(tele.seconds * 50.0)
+    assert tele.watts == pytest.approx(50.0)
+    assert tele.provenance == "estimated"
+    with meter_window(None) as tele:
+        time.sleep(0.001)
+    assert tele.joules is None and tele.seconds > 0
+
+
+# -- report -------------------------------------------------------------------
+
+
+def make_plan(key, mapping, seconds, joules, provenance, objective):
+    return Plan(
+        key=key,
+        space="TestSpace()",
+        mapping=dict(mapping),
+        pattern=tuple(sorted(mapping)),
+        baseline_seconds=0.1,
+        best_seconds=seconds,
+        speedup=0.1 / seconds,
+        strategy="exhaustive",
+        evaluations=4,
+        search_seconds=1.0,
+        fingerprint=environment_fingerprint(),
+        objective=objective,
+        best_energy_joules=joules,
+        best_energy_provenance=provenance,
+    )
+
+
+def test_report_diff_golden(tmp_path):
+    store_a = PlanStore(tmp_path / "lat")
+    store_b = PlanStore(tmp_path / "ppw")
+    store_a.save(
+        make_plan(
+            "zoo:llama:train", {"attention": "pallas"}, 0.01, 5.0,
+            "measured", "latency",
+        )
+    )
+    store_b.save(
+        make_plan(
+            "zoo:llama:train", {"attention": "xla"}, 0.02, 2.0,
+            "estimated", "perf_per_watt",
+        )
+    )
+    store_a.save(  # only in A: must not appear in the diff
+        make_plan("zoo:llama:decode", {}, 0.01, 1.0, None, "latency")
+    )
+    rows = diff_stores(store_a, store_b)
+    assert len(rows) == 1
+    row = rows[0]
+    assert (row.arch, row.kind) == ("llama", "train")
+    assert not row.agree
+    assert row.seconds_delta_pct == pytest.approx(100.0)
+    assert row.joules_delta_pct == pytest.approx(-60.0)
+    table = render_table(rows, label_a="lat", label_b="ppw")
+    assert "attention=pallas" in table
+    assert "attention=xla" in table
+    assert "5J*" in table  # measured provenance marked
+    assert "2J~" in table  # estimated provenance marked
+    assert "+100.0%" in table and "-60.0%" in table
+
+
+def test_report_cli_json(tmp_path, capsys):
+    store_a = PlanStore(tmp_path / "a")
+    store_b = PlanStore(tmp_path / "b")
+    plan = make_plan(
+        "zoo:m:train", {"fft2d": "pallas"}, 0.01, 3.0, "measured", "latency"
+    )
+    store_a.save(plan)
+    store_b.save(plan)
+    assert report_mod.main(
+        [str(tmp_path / "a"), str(tmp_path / "b"), "--json"]
+    ) == 0
+    rows = json.loads(capsys.readouterr().out)
+    assert rows[0]["agree"] is True
+    assert rows[0]["provenance_a"] == "measured"
+
+
+def test_report_selftest_passes(capsys):
+    assert report_mod.selftest() == 0
+    out = capsys.readouterr().out
+    assert "selftest OK" in out
+    assert "J*" in out or "J~" in out
+
+
+def test_search_trace_from_report_and_cache():
+    space = sleep_space(tag="trace")
+    cache = MeasurementCache()
+    rep = ExhaustiveSearch().search(space, (0,), cache=cache, repeats=1)
+    points = search_trace(rep)
+    assert len(points) == len(rep.trials)
+    assert points[-1].best_seconds == min(t.seconds for t in rep.trials)
+    # best-so-far is monotonically non-increasing (the Fig. 4 curve)
+    assert all(
+        p1.best_seconds >= p2.best_seconds
+        for p1, p2 in zip(points, points[1:])
+    )
+    cache_points = search_trace(cache)
+    assert len(cache_points) == cache.misses
+    # cache-derived traces carry the candidate's axis=choice labels so the
+    # curve identifies what each measurement was
+    assert any("a=offload" in p.pattern for p in cache_points)
+    assert all(p.pattern for p in cache_points)
+
+
+# -- launch-surface defaults --------------------------------------------------
+
+
+def test_default_plan_key_requires_stored_plan(tmp_path):
+    from repro.offload.zoo import default_plan_key
+
+    assert default_plan_key(str(tmp_path), "llama", "train") is None
+    assert default_plan_key(None, "llama", "train") is None
+    PlanStore(tmp_path).save(
+        make_plan("zoo:llama:train", {}, 0.01, None, None, "latency")
+    )
+    assert default_plan_key(str(tmp_path), "llama", "train") == (
+        "zoo:llama:train"
+    )
+    assert default_plan_key(str(tmp_path), "llama", "decode") is None
