@@ -23,6 +23,12 @@ lint:
 report:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) -m repro.metering.report --selftest
 
+# Serving load smoke: Poisson arrival trace through the ServeEngine on the
+# reduced config — tok/s, p50/p99 latency and joules/token with provenance.
+.PHONY: serve-bench
+serve-bench:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --meter auto
+
 .PHONY: deps-dev
 deps-dev:
 	$(PYTHON) -m pip install -r requirements-dev.txt

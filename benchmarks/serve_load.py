@@ -1,0 +1,140 @@
+"""Poisson load generator for the serving engine.
+
+Drives :class:`repro.serve.ServeEngine` with an open-loop request trace —
+exponential inter-arrival times (a Poisson process, the standard serving
+load model), mixed prompt/generation lengths — and reports what the
+power-saving follow-up work (arXiv:2110.11520) evaluates offloads under:
+sustained-load throughput (tok/s), request latency and TTFT percentiles
+(p50/p99), and joules/token with measured-vs-estimated provenance.
+
+  PYTHONPATH=src python benchmarks/serve_load.py --arch llama3.2-1b \
+      --reduced --requests 16 --rate 8 --meter auto
+
+``--fast`` shrinks the trace for CI (``make serve-bench``).  ``--plan-dir``
+binds each phase to its committed zoo plan, so the benchmark measures the
+*deployed* offload pattern, not the default bindings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(
+    0, os.path.join(os.path.dirname(__file__), "..", "src")
+)
+
+from repro.launch.serve import (  # noqa: E402
+    add_engine_args,
+    build_engine,
+    make_requests,
+    percentile,
+)
+from repro.serve import Request  # noqa: E402
+
+
+def run_trace(engine, requests, arrivals, max_seconds: float = 600.0):
+    """Open-loop drive: submit each request at its arrival time (relative
+    to the trace start), stepping the engine in between.  Returns the
+    observed makespan in seconds (completions stay on the engine)."""
+    t0 = time.perf_counter()
+    pending = list(zip(arrivals, requests))
+    pending.reverse()  # pop() takes the earliest
+    while pending or engine.scheduler.has_work:
+        now = time.perf_counter() - t0
+        while pending and pending[-1][0] <= now:
+            engine.submit(pending.pop()[1])
+        if engine.scheduler.has_work:
+            engine.step()
+        elif pending:
+            # idle gap before the next arrival: sleep it off instead of
+            # spinning (open-loop arrivals must not be accelerated)
+            time.sleep(min(pending[-1][0] - now, 0.05))
+        if time.perf_counter() - t0 > max_seconds:
+            raise RuntimeError(f"trace still running after {max_seconds}s")
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    add_engine_args(ap)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="mean arrival rate, requests/second (Poisson)")
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--len-jitter", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--gen-jitter", type=int, default=4)
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny trace on the reduced config (CI smoke)")
+    args = ap.parse_args()
+    if args.fast:
+        args.reduced = True
+        args.requests = min(args.requests, 8)
+        args.prompt_len, args.len_jitter = 12, 4
+        args.gen, args.gen_jitter = 8, 3
+        args.rate = max(args.rate, 8.0)
+        args.slots = min(args.slots, 3)
+        args.max_len = min(args.max_len, 64)
+
+    engine = build_engine(args)
+    rng = np.random.default_rng(args.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    requests = make_requests(engine.cfg, args, rng)
+
+    # warmup outside the measured trace: prefill retraces per (padded)
+    # prompt length, so compile EVERY length the trace will submit — plus
+    # one decode step — or the measured percentiles report XLA compile
+    # time instead of serving time; then zero every counter so the warmup
+    # never shows up as served traffic
+    for length in sorted({len(r.prompt) for r in requests}):
+        engine.submit(Request(list(range(1, length + 1)), max_new_tokens=2))
+    engine.run_until_idle(max_steps=1000)
+    engine.reset_stats()
+
+    makespan = run_trace(engine, requests, arrivals)
+    completions = list(engine.completions.values())
+    assert len(completions) == args.requests, (
+        f"{len(completions)}/{args.requests} requests completed"
+    )
+
+    stats = engine.stats
+    gen_tokens = sum(len(c.tokens) for c in completions)
+    latencies = [c.latency for c in completions]
+    ttfts = [c.ttft for c in completions]
+    decode = engine.telemetry["decode"]
+    prefill = engine.telemetry["prefill"]
+
+    print(f"arch={engine.cfg.name} slots={engine.n_slots} "
+          f"requests={args.requests} rate={args.rate}/s "
+          f"makespan={makespan:.2f}s")
+    print(prefill.summary())
+    print(decode.summary())
+    print(f"throughput: {gen_tokens / makespan:.1f} generated tok/s "
+          f"({gen_tokens} tokens)")
+    print(f"latency: p50 {percentile(latencies, 0.5)*1e3:.1f} ms  "
+          f"p99 {percentile(latencies, 0.99)*1e3:.1f} ms")
+    print(f"ttft:    p50 {percentile(ttfts, 0.5)*1e3:.1f} ms  "
+          f"p99 {percentile(ttfts, 0.99)*1e3:.1f} ms")
+    joules = (
+        (prefill.joules or 0.0) + (decode.joules or 0.0)
+        if (prefill.joules is not None or decode.joules is not None)
+        else None
+    )
+    if joules is not None:
+        prov = decode.provenance or prefill.provenance
+        print(f"energy: {joules:.1f} J, "
+              f"{joules / max(gen_tokens, 1):.3g} J/token [{prov}]")
+    else:
+        print("energy: no meter (--meter auto for telemetry)")
+    print(f"continuous batching: {stats.slot_reuses} slot reuses, "
+          f"max {stats.max_active} concurrent, "
+          f"{stats.steps} engine steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,52 +1,120 @@
-"""Serving driver: prefill a batch of prompts, then batched greedy decode.
+"""Serving CLI — a thin driver over :class:`repro.serve.ServeEngine`.
+
+Submits a mixed-length batch of random-token requests and drives the
+engine until idle, printing throughput, latency and power telemetry:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --reduced \
-      --batch 4 --prompt-len 64 --gen 32
+      --requests 8 --prompt-len 24 --len-jitter 8 --gen 16 --slots 4
 
-Production startup loads a previously verified offload plan (committed by an
-``OffloadSession`` in a verification environment — see
-``repro.offload.zoo``) and binds it with zero re-measurement:
+Production startup binds previously verified offload plans (committed by
+``repro.offload.zoo`` in a verification environment) per phase — prefill
+and decode each trace under their own ``zoo:<arch>:<phase>`` plan:
 
-  ... --plan-dir results/plans --plan-key zoo:llama3.2-1b:prefill
+  ... --plan-dir results/plans
 
-With ``--plan-dir`` alone, the stored ``zoo:<arch>:prefill`` /
-``zoo:<arch>:decode`` plans (when present) bind automatically — each phase
-is traced under its own verified pattern.  ``--plan-search`` searches and
-commits missing zoo plans first (using ``--executor`` to parallelise the
-measurement), and ``--meter`` reports the run's real power telemetry with
-measured/estimated provenance.
+``--plan-key`` forces one explicit key for both phases, ``--plan-search``
+searches and commits missing zoo plans first (``--executor`` parallelises
+the measurement), ``--meter`` adds real power telemetry with
+measured/estimated provenance, and ``--sampler`` sets the default policy
+(``greedy`` | ``temperature:0.8`` | ``top_k:40:0.8``).
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.metering import meter_window, resolve_meter
-from repro.models import lm
-from repro.offload import OffloadSession
-from repro.offload import load_plan_bindings  # noqa: F401 — deprecated re-export
+from repro.serve import Request, Sampler, ServeEngine
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def percentile(xs: "list[float]", q: float) -> float:
+    """Empty-safe quantile of a sample (shared with serve_load.py)."""
+    if not xs:
+        return float("nan")
+    return float(np.percentile(xs, q * 100))
+
+
+def build_engine(args: argparse.Namespace) -> ServeEngine:
+    """Engine construction shared with ``benchmarks/serve_load.py``."""
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    plan_keys: dict[str, str | None] | str | None = None
+    if args.plan_key:
+        plan_keys = args.plan_key
+    elif args.plan_dir and args.plan_search:
+        from repro.offload.zoo import launch_plan_keys
+
+        plan_keys = launch_plan_keys(
+            args.plan_dir,
+            args.arch,
+            ("prefill", "decode"),
+            search=True,
+            targets=tuple(args.plan_targets.split(",")),
+            executor=args.executor,
+            meter=args.meter,
+        )
+    return ServeEngine(
+        cfg,
+        n_slots=args.slots,
+        max_len=args.max_len,
+        sampler=Sampler.parse(args.sampler),
+        meter=args.meter,
+        plan_dir=args.plan_dir,
+        plan_keys=plan_keys,
+        max_tokens_per_step=args.step_budget,
+        prefill_bucket=args.prefill_bucket,
+        seed=args.seed,
+        quiet=False,
+    )
+
+
+def make_requests(
+    cfg, args: argparse.Namespace, rng: np.random.Generator
+) -> list[Request]:
+    """Mixed-length random-token trace: prompt/generation lengths jitter
+    uniformly around the base values so slots stagger and free at
+    different steps (the continuous-batching case, not the static batch)."""
+    requests = []
+    for _ in range(args.requests):
+        plen = max(1, args.prompt_len + int(rng.integers(
+            -args.len_jitter, args.len_jitter + 1
+        )))
+        gen = max(1, args.gen + int(rng.integers(
+            -args.gen_jitter, args.gen_jitter + 1
+        )))
+        prompt = rng.integers(0, cfg.vocab_size, plen).tolist()
+        requests.append(Request(prompt, max_new_tokens=gen))
+    return requests
+
+
+def add_engine_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="KV slots = max concurrent requests")
+    ap.add_argument("--max-len", type=int, default=256,
+                    help="cache positions per slot (prompt + generation)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sampler", default="greedy",
+                    help="default sampling policy: greedy | "
+                         "temperature:<t> | top_k:<k>[:<t>]")
+    ap.add_argument("--step-budget", type=int, default=None,
+                    help="max tokens (prefill + decode) one engine step "
+                         "may process — bounds prefill-induced decode "
+                         "stalls under bursty arrivals")
+    ap.add_argument("--prefill-bucket", type=int, default=None,
+                    help="pad prompts to a multiple of this bucket so "
+                         "prefill traces are shared across lengths "
+                         "(attention-family archs only)")
     ap.add_argument("--plan-dir", default=None,
                     help="PlanStore directory with verified offload plans")
     ap.add_argument("--plan-key", default=None,
-                    help="plan to load and bind at startup (zero search); "
-                         "defaults to the stored zoo:<arch>:prefill and "
-                         "zoo:<arch>:decode plans when present")
+                    help="explicit plan key bound to BOTH phases; default "
+                         "is the stored zoo:<arch>:prefill / :decode plans")
     ap.add_argument("--plan-search", action="store_true",
                     help="search+commit missing zoo plans for this arch "
                          "before binding (verification-environment step)")
@@ -57,81 +125,53 @@ def main() -> None:
                     help="measurement executor for --plan-search: serial | "
                          "device-parallel | batched")
     ap.add_argument("--meter", default="none",
-                    help="power telemetry for the run (and --plan-search): "
-                         "none | auto | time | nvml | rapl | psutil")
+                    help="power telemetry: none | auto | time | nvml | "
+                         "rapl | psutil | tpu")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    add_engine_args(ap)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--len-jitter", type=int, default=8,
+                    help="uniform prompt-length jitter (staggers slots)")
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--gen-jitter", type=int, default=4)
+    ap.add_argument("--max-steps", type=int, default=10_000)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    params = lm.init_params(cfg, seed=args.seed)
+    engine = build_engine(args)
     rng = np.random.default_rng(args.seed)
-    max_len = args.prompt_len + args.gen
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    requests = make_requests(engine.cfg, args, rng)
+    for request in requests:
+        engine.submit(request)
+    completions = engine.run_until_idle(max_steps=args.max_steps)
+
+    stats = engine.stats
+    assert stats.requests_completed == len(requests), (
+        f"{stats.requests_completed}/{len(requests)} requests completed"
     )
-
-    if args.plan_key:
-        # an explicit key binds both phases; a key without a dir flows into
-        # attach, which warns that both are required — never silently drop
-        # an explicitly requested plan
-        keys = {"prefill": args.plan_key, "decode": args.plan_key}
-    else:
-        from repro.offload.zoo import launch_plan_keys
-
-        keys = launch_plan_keys(
-            args.plan_dir,
-            args.arch,
-            ("prefill", "decode"),
-            search=args.plan_search,
-            targets=tuple(args.plan_targets.split(",")),
-            executor=args.executor,
-            meter=args.meter,
-        )
-    meter = resolve_meter(args.meter)
-
-    cache = lm.init_cache(cfg, args.batch, max_len)
-    # a plan dir whose store has no plan for a phase runs that phase on
-    # default bindings, silently (attach treats dir-without-key as noise);
-    # a key without a dir keeps the dir=None so attach warns about it
-    prefill_dir = args.plan_dir if keys["prefill"] else None
-    decode_dir = args.plan_dir if keys["decode"] else None
-    with OffloadSession.attach(prefill_dir, keys["prefill"]):
-        prefill = jax.jit(lambda p, b, c: lm.prefill(p, b, cfg, c))
-        t0 = time.time()
-        with meter_window(meter) as tele_prefill:
-            logits, cache = prefill(params, {"tokens": prompts}, cache)
-            logits.block_until_ready()
-        t_prefill = time.time() - t0
-
-    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None].astype(
-        jnp.int32
-    )
-    out_tokens = [tok]
-    with OffloadSession.attach(decode_dir, keys["decode"]):
-        decode = jax.jit(lambda p, t, c: lm.decode_step(p, t, cfg, c))
-        t0 = time.time()
-        with meter_window(meter) as tele_decode:
-            for _ in range(args.gen - 1):
-                logits, cache = decode(params, tok, cache)
-                tok = jnp.argmax(
-                    logits[:, 0, :cfg.vocab_size], axis=-1
-                )[:, None].astype(jnp.int32)
-                out_tokens.append(tok)
-            tok.block_until_ready()
-        t_dec = time.time() - t0
-
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={args.batch}")
-    print(f"prefill: {args.prompt_len} toks in {t_prefill*1e3:.1f} ms")
+    print(f"arch={engine.cfg.name} slots={args.slots} "
+          f"requests={len(requests)}")
+    for phase in ("prefill", "decode"):
+        print(engine.telemetry[phase].summary())
+    latencies = [c.latency for c in completions]
+    ttfts = [c.ttft for c in completions]
     print(
-        f"decode: {args.gen-1} steps in {t_dec*1e3:.1f} ms "
-        f"({(args.gen-1)*args.batch/max(t_dec,1e-9):.1f} tok/s)"
+        f"latency: p50 {percentile(latencies, 0.5)*1e3:.1f} ms "
+        f"p99 {percentile(latencies, 0.99)*1e3:.1f} ms | "
+        f"ttft: p50 {percentile(ttfts, 0.5)*1e3:.1f} ms "
+        f"p99 {percentile(ttfts, 0.99)*1e3:.1f} ms"
     )
-    if meter is not None:
-        print(f"power: prefill {tele_prefill.summary()}")
-        print(f"power: decode {tele_decode.summary()}")
-    print("sample:", np.asarray(gen[0, :16]))
+    print(
+        f"continuous batching: {stats.slot_reuses} slot reuses, "
+        f"max {stats.max_active} concurrent, {stats.steps} engine steps, "
+        f"decode median {engine.monitor.median_step()*1e3:.2f} ms/step"
+    )
+    sample = completions[0]
+    print(f"sample (request {sample.request_id}):",
+          np.asarray(sample.tokens[:16]))
 
 
 if __name__ == "__main__":

@@ -157,7 +157,9 @@ def make_prefill_step(cfg: ArchConfig, shape: ShapeConfig):
         # materialised.
         x, _, new_cache = lm.backbone(params, batch, cfg, "prefill", cache)
         logits_last = lm.head(params, x[:, -1:, :], cfg)
-        new_cache["index"] = jnp.asarray(shape.seq_len, jnp.int32)
+        new_cache["index"] = jnp.full(
+            (shape.global_batch,), shape.seq_len, jnp.int32
+        )
         return logits_last[:, 0, :], new_cache
 
     return prefill_step

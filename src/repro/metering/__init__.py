@@ -38,6 +38,7 @@ from repro.metering.meters import (  # noqa: F401
     NvmlMeter,
     PsutilCpuMeter,
     RaplMeter,
+    TpuMeter,
     WindowTelemetry,
     autodetect,
     meter_window,

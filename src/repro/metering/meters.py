@@ -7,6 +7,8 @@ only ``TimeProportionalPower`` (energy = runtime x nominal watts, provenance
 
   NvmlMeter       NVIDIA board draw via pynvml, sampled on a background
                   thread and integrated over the trial window.
+  TpuMeter        TPU board draw via libtpu's monitoring SDK, sampled the
+                  same way (probed ahead of the CPU meters on TPU hosts).
   RaplMeter       Intel RAPL package energy counters
                   (``/sys/class/powercap/intel-rapl:*/energy_uj``).
   PsutilCpuMeter  CPU utilisation x TDP model via psutil — a last-resort
@@ -41,48 +43,35 @@ from repro.core.planner.objectives import (
 )
 
 
-class NvmlMeter(PowerMeter):
-    """Sampled NVIDIA board draw integrated over the trial window.
-
-    ``begin`` starts a daemon thread polling
-    ``nvmlDeviceGetPowerUsage`` (milliwatts) every ``1/sample_hz`` seconds;
-    ``end`` stops it, integrates the samples trapezoidally into average
-    watts over the window, and charges ``avg_watts x seconds`` per call.
-    """
+class _SampledPowerMeter(PowerMeter):
+    """Shared machinery for meters that *sample* an instantaneous-watts
+    counter: ``begin`` starts a daemon thread polling ``_read_now()``
+    every ``1/sample_hz`` seconds; ``end`` stops it, integrates the
+    samples trapezoidally into average watts over the window, and charges
+    ``avg_watts x seconds`` per call."""
 
     provenance = "measured"
-    exclusive = True  # one board counter answers for every concurrent trial
+    exclusive = True  # one device counter answers for every concurrent trial
 
-    def __init__(self, index: int = 0, sample_hz: float = 50.0) -> None:
-        import pynvml
-
-        self._nvml = pynvml
-        pynvml.nvmlInit()
-        self._handle = pynvml.nvmlDeviceGetHandleByIndex(index)
+    def __init__(self, sample_hz: float = 50.0) -> None:
         self.sample_hz = max(sample_hz, 1.0)
         self._samples: list[tuple[float, float]] = []
         self._stop: threading.Event | None = None
         self._thread: threading.Thread | None = None
 
-    @classmethod
-    def available(cls) -> bool:
-        try:
-            import pynvml
-
-            pynvml.nvmlInit()
-            return pynvml.nvmlDeviceGetCount() > 0
-        except Exception:  # noqa: BLE001 — no driver / no lib / no device
-            return False
+    def _read_now(self) -> float:
+        """Instantaneous draw in watts (may raise transiently)."""
+        raise NotImplementedError
 
     def _sample_loop(self, stop: threading.Event) -> None:
         period = 1.0 / self.sample_hz
         while not stop.is_set():
             try:
-                mw = self._nvml.nvmlDeviceGetPowerUsage(self._handle)
+                watts = self._read_now()
             except Exception:  # noqa: BLE001 — transient driver error
-                mw = None
-            if mw is not None:
-                self._samples.append((time.perf_counter(), mw / 1000.0))
+                watts = None
+            if watts is not None:
+                self._samples.append((time.perf_counter(), watts))
             stop.wait(period)
 
     def begin(self) -> None:
@@ -96,9 +85,6 @@ class NvmlMeter(PowerMeter):
             target=self._sample_loop, args=(self._stop,), daemon=True
         )
         self._thread.start()
-
-    def _read_now(self) -> float:
-        return self._nvml.nvmlDeviceGetPowerUsage(self._handle) / 1000.0
 
     def end(
         self, measurement: Any, space: Any = None, candidate: Any = None
@@ -121,6 +107,94 @@ class NvmlMeter(PowerMeter):
             return None
         avg_watts = joules / window
         return avg_watts * measurement.seconds
+
+
+class NvmlMeter(_SampledPowerMeter):
+    """Sampled NVIDIA board draw (``nvmlDeviceGetPowerUsage``, milliwatts)
+    integrated over the trial window."""
+
+    def __init__(self, index: int = 0, sample_hz: float = 50.0) -> None:
+        import pynvml
+
+        self._nvml = pynvml
+        pynvml.nvmlInit()
+        self._handle = pynvml.nvmlDeviceGetHandleByIndex(index)
+        super().__init__(sample_hz)
+
+    @classmethod
+    def available(cls) -> bool:
+        try:
+            import pynvml
+
+            pynvml.nvmlInit()
+            return pynvml.nvmlDeviceGetCount() > 0
+        except Exception:  # noqa: BLE001 — no driver / no lib / no device
+            return False
+
+    def _read_now(self) -> float:
+        return self._nvml.nvmlDeviceGetPowerUsage(self._handle) / 1000.0
+
+
+class TpuMeter(_SampledPowerMeter):
+    """TPU board draw via libtpu's monitoring SDK (ROADMAP open item).
+
+    Probes the ``libtpu.sdk.tpumonitoring`` surface for a power metric
+    (the exact metric name varies by libtpu release, so the reader scans
+    ``list_supported_metrics()`` for a ``power`` gauge) and samples it on
+    the shared background thread.  On hosts without libtpu — like this
+    CPU container — ``available()`` is simply False and ``autodetect``
+    falls through to the CPU meters; asking for ``"tpu"`` explicitly
+    raises, matching every other named meter.  When telemetry is present
+    the readings are hardware counters: provenance ``"measured"``,
+    slotted ahead of the CPU models in the probe order.
+    """
+
+    def __init__(self, sample_hz: float = 10.0) -> None:
+        reader = self._power_reader()
+        if reader is None:
+            raise RuntimeError(
+                "no TPU power telemetry (libtpu monitoring) on this host"
+            )
+        self._reader = reader
+        super().__init__(sample_hz)
+
+    @staticmethod
+    def _power_reader():
+        """A zero-arg watts reader over libtpu monitoring, or None."""
+        try:
+            from libtpu.sdk import tpumonitoring
+        except Exception:  # noqa: BLE001 — no libtpu on this host
+            return None
+        try:
+            names = list(tpumonitoring.list_supported_metrics())
+        except Exception:  # noqa: BLE001 — SDK present, service not up
+            return None
+        for name in names:
+            if "power" not in str(name).lower():
+                continue
+
+            def read(name=str(name)) -> float:
+                data = tpumonitoring.get_metric(name).data()
+                if not isinstance(data, (list, tuple)):
+                    data = [data]
+                return float(sum(float(v) for v in data))
+
+            try:
+                read()
+            except Exception:  # noqa: BLE001 — metric listed but unreadable
+                continue
+            return read
+        return None
+
+    @classmethod
+    def available(cls) -> bool:
+        try:
+            return cls._power_reader() is not None
+        except Exception:  # noqa: BLE001 — defensive: probing must not raise
+            return False
+
+    def _read_now(self) -> float:
+        return self._reader()
 
 
 @dataclasses.dataclass
@@ -278,9 +352,11 @@ class PsutilCpuMeter(PowerMeter):
         return watts * measurement.seconds
 
 
-#: Autodetection order: hardware counters first, models last.
+#: Autodetection order: accelerator counters first (NVML board draw, then
+#: libtpu telemetry ahead of the CPU models), CPU counters next, models last.
 METER_PROBE_ORDER: tuple[tuple[str, type], ...] = (
     ("nvml", NvmlMeter),
+    ("tpu", TpuMeter),
     ("rapl", RaplMeter),
     ("psutil", PsutilCpuMeter),
 )
@@ -289,7 +365,7 @@ METER_PROBE_ORDER: tuple[tuple[str, type], ...] = (
 def autodetect(fallback_watts: float = DEFAULT_DEVICE_WATTS) -> PowerMeter:
     """Best available power meter for this host.
 
-    Probes ``nvml -> rapl -> psutil`` and degrades gracefully to
+    Probes ``nvml -> tpu -> rapl -> psutil`` and degrades gracefully to
     ``TimeProportionalPower(fallback_watts)`` — the returned meter is
     always usable, so callers never need an availability check of their
     own.

@@ -276,20 +276,39 @@ _register_chunked()
 
 
 # -- decode attention over a cache ----------------------------------------------
+#
+# ``index`` is per-slot: shape (B,), the write position of the new token in
+# each batch row's cache.  Continuous-batching serving (``repro.serve``)
+# staggers requests across slots, so every row decodes at its own position;
+# the single-sequence case is just the vector with equal entries.
+
+
+def _update_slot_rows(cache: jax.Array, update: jax.Array, index: jax.Array,
+                      axis: int) -> jax.Array:
+    """Per-batch-row ``dynamic_update_slice`` at each row's own position.
+
+    ``cache``/``update`` share a leading batch axis; ``axis`` is the sequence
+    axis *including* the batch axis.  ``index`` is (B,) int32.
+    """
+    return jax.vmap(
+        lambda c, u, i: jax.lax.dynamic_update_slice_in_dim(
+            c, u, i, axis=axis - 1
+        )
+    )(cache, update, index)
 
 
 def decode_attention_gqa(
     q: jax.Array,  # (B, H, 1, D)
     k_cache: jax.Array,  # (B, KH, Smax, D)
     v_cache: jax.Array,
-    index: jax.Array,  # scalar: current position (new token at this slot)
+    index: jax.Array,  # (B,): each row's current position (new token slot)
 ) -> jax.Array:
     b, h, _, d = q.shape
     _, kh, smax, _ = k_cache.shape
     g = h // kh
     qg = q.reshape(b, kh, g, d).astype(jnp.float32) / (d ** 0.5)
     s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32))
-    valid = jnp.arange(smax)[None, None, None, :] <= index
+    valid = jnp.arange(smax)[None, None, None, :] <= index[:, None, None, None]
     s = jnp.where(valid, s, _NEG)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
@@ -326,10 +345,10 @@ def gqa_forward(
 
     if mode == "decode":
         assert cache is not None and index is not None
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache = _update_slot_rows(
             cache["k"], kt.astype(cache["k"].dtype), index, axis=2
         )
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache = _update_slot_rows(
             cache["v"], vt.astype(cache["v"].dtype), index, axis=2
         )
         o = decode_attention_gqa(qt, k_cache, v_cache, index)
@@ -383,10 +402,10 @@ def mla_forward(
 
     if mode == "decode":
         assert cache is not None and index is not None
-        c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache = _update_slot_rows(
             cache["c"], c.astype(cache["c"].dtype), index, axis=1
         )
-        kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache = _update_slot_rows(
             cache["kr"], kr[:, :, 0, :].astype(cache["kr"].dtype), index, axis=1
         )
         # absorbed decode: score = q_abs . c  +  qr . kr
@@ -403,7 +422,10 @@ def mla_forward(
         )
         sc = (s_nope + s_rope) * scale  # (B,H,1,T)
         smax = c_cache.shape[1]
-        valid = jnp.arange(smax)[None, None, None, :] <= index
+        valid = (
+            jnp.arange(smax)[None, None, None, :]
+            <= index[:, None, None, None]
+        )
         sc = jnp.where(valid, sc, _NEG)
         pattn = jax.nn.softmax(sc, axis=-1)
         ctx = jnp.einsum(

@@ -137,7 +137,9 @@ def cache_metas_tree(cfg: ArchConfig, batch: int, max_len: int) -> dict:
             caches[g.key] = _stack(ssm_state_metas(cfg, batch), g.count)
         else:
             caches[g.key] = _stack(cache_metas(cfg, batch, max_len), g.count)
-    caches["index"] = ParamMeta((), (), "int32", init="zeros")
+    # per-slot write position: continuous-batching serving staggers
+    # requests across batch rows, so each row carries its own length
+    caches["index"] = ParamMeta((batch,), ("act_batch",), "int32", init="zeros")
     return caches
 
 
@@ -298,7 +300,10 @@ def backbone(
 
     if mode == "decode":
         index = cache["index"]
-        positions = jnp.broadcast_to(index[None, None], (b, s)).astype(jnp.int32)
+        if index.ndim == 0:  # legacy scalar-index caches
+            index = jnp.broadcast_to(index, (b,))
+        index = index.astype(jnp.int32)
+        positions = jnp.broadcast_to(index[:, None], (b, s)).astype(jnp.int32)
     else:
         index = None
         positions = jnp.broadcast_to(
@@ -339,8 +344,11 @@ def forward(
     if cache is not None:
         if mode == "decode":
             new_cache["index"] = cache["index"] + 1
-        else:  # prefill: cache now holds s tokens
-            new_cache["index"] = jnp.asarray(s, jnp.int32)
+        else:  # prefill: every row's cache now holds s tokens
+            new_cache["index"] = jnp.full(
+                (batch["tokens" if "tokens" in batch else "embeds"].shape[0],),
+                s, jnp.int32,
+            )
     return logits, aux_total, new_cache
 
 
@@ -368,8 +376,9 @@ def prefill(params: Any, batch: dict, cfg: ArchConfig, cache: Any):
 
 
 def decode_step(params: Any, tokens: jax.Array, cfg: ArchConfig, cache: Any):
-    """tokens (B, 1) -> (logits (B,1,V), new_cache).  cache["index"] is the
-    write position of this token."""
+    """tokens (B, 1) -> (logits (B,1,V), new_cache).  cache["index"] (B,)
+    is each row's write position for this token — rows may sit at
+    different positions (continuous batching)."""
     logits, _, new_cache = forward(
         params, {"tokens": tokens}, cfg, mode="decode", cache=cache
     )

@@ -5,8 +5,8 @@ verify -> commit), one result type (``OffloadResult``), pluggable
 objectives (``Latency``, ``PerfPerWatt``, ``WeightedCost`` over an optional
 ``PowerMeter``), persistent plans (``PlanStore``), and the zoo-wide
 ``plan_zoo`` sweep.  The historical entry points —
-``OffloadEngine.adapt``, ``measure_block_pattern``, ``run_ga``,
-``launch/plans.py`` — are thin deprecation shims over this package.
+``OffloadEngine.adapt``, ``measure_block_pattern``, ``run_ga`` — are thin
+deprecation shims over this package.
 
 Quickstart::
 
@@ -48,10 +48,6 @@ from repro.offload.session import (  # noqa: F401
     declared_pattern,
     stored_binding,
 )
-
-#: Deprecated alias for :func:`stored_binding` (historical
-#: ``launch.plans.load_plan_bindings`` name).
-load_plan_bindings = stored_binding
 
 
 def __getattr__(name):

@@ -1,0 +1,37 @@
+"""``repro.serve`` — the request-level serving subsystem.
+
+Production surface for a *committed* offload pattern: a
+:class:`ServeEngine` accepts :class:`Request` objects via ``submit()``,
+schedules them with continuous batching over a slot-managed KV cache, and
+emits streaming :class:`Token` events plus a final :class:`Completion` per
+request.  Prefill and decode each trace under their own committed
+``zoo:<arch>:<phase>`` plan, with per-phase power telemetry and a decode
+:class:`~repro.runtime.monitor.StepMonitor`.
+
+Quickstart::
+
+    from repro.serve import Request, Sampler, ServeEngine
+
+    engine = ServeEngine("llama3.2-1b", plan_dir="results/plans",
+                         n_slots=4, max_len=256, meter="auto")
+    engine.submit(Request(prompt, max_new_tokens=32,
+                          sampling=Sampler.with_top_k(40, 0.8)))
+    for event in engine.step():      # or engine.run_until_idle()
+        ...                          # Token / Completion events
+
+``python -m repro.launch.serve`` is the CLI over this engine and
+``benchmarks/serve_load.py`` the Poisson load generator.
+"""
+
+from repro.serve.engine import (  # noqa: F401
+    EngineStats,
+    PhaseTelemetry,
+    ServeEngine,
+)
+from repro.serve.request import (  # noqa: F401
+    Completion,
+    Request,
+    Token,
+)
+from repro.serve.sampler import Sampler, sample_tokens  # noqa: F401
+from repro.serve.scheduler import Scheduler  # noqa: F401

@@ -1,0 +1,541 @@
+"""ServeEngine — request-level serving with continuous batching.
+
+The engine turns the model zoo's prefill/decode steps into a *service*:
+callers ``submit()`` :class:`Request` objects at any time, drive the engine
+with ``step()`` (one scheduling round: admit waiting requests into free KV
+slots, then one fused decode step for every active slot) or
+``run_until_idle()``, and consume streaming :class:`Token` events plus a
+final :class:`Completion` per request.
+
+Design points, each load-bearing for the paper's "committed pattern in
+operation" end state:
+
+* **Continuous batching** — the KV cache is ``n_slots`` batch rows with
+  *per-slot* write positions (``cache["index"]`` is (B,)); finished
+  requests free their slot mid-flight and the next waiting request is
+  prefilled straight into it while the other slots keep decoding.  A
+  token budget (:class:`repro.serve.scheduler.Scheduler`) bounds how much
+  prefill work any single step may inject ahead of the in-flight decodes.
+* **Plan-aware phase dispatch** — prefill and decode are *different
+  programs* with different winning offload patterns, so each phase is
+  traced under its own committed plan (``zoo:<arch>:prefill`` /
+  ``zoo:<arch>:decode`` from a :class:`PlanStore`), bound with zero
+  re-measurement exactly like ``OffloadSession.attach``.
+* **Fused sampling** — logits never leave the device: the jitted phase
+  programs end in :func:`repro.serve.sampler.sample_tokens`, so the
+  per-step host transfer is (B,) token ids, not (B, V) logits.
+* **Telemetry** — every phase call runs under ``metering.meter_window``
+  and aggregates into per-phase :class:`PhaseTelemetry` (seconds, joules,
+  measured/estimated provenance); the decode loop feeds a
+  ``runtime.StepMonitor`` for throughput and straggler stats.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Any, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.core import blocks as blocks_mod
+from repro.metering import meter_window, resolve_meter
+from repro.metering.meters import WindowTelemetry
+from repro.models import lm
+from repro.offload import stored_binding
+from repro.runtime.monitor import StepMonitor
+from repro.serve.request import Completion, Request, RequestState, Token
+from repro.serve.sampler import Sampler, sample_tokens
+from repro.serve.scheduler import Scheduler
+
+PHASES = ("prefill", "decode")
+
+
+@dataclasses.dataclass
+class PhaseTelemetry:
+    """Aggregate of every ``meter_window`` a phase ran under."""
+
+    phase: str
+    calls: int = 0
+    seconds: float = 0.0
+    tokens: int = 0
+    joules: float | None = None
+    provenance: str | None = None
+
+    def add(self, tele: WindowTelemetry, tokens: int) -> None:
+        self.calls += 1
+        self.seconds += tele.seconds
+        self.tokens += tokens
+        if tele.joules is not None:
+            self.joules = (self.joules or 0.0) + tele.joules
+            self.provenance = tele.provenance
+
+    @property
+    def tokens_per_second(self) -> float:
+        return self.tokens / self.seconds if self.seconds else 0.0
+
+    @property
+    def joules_per_token(self) -> float | None:
+        if self.joules is None or not self.tokens:
+            return None
+        return self.joules / self.tokens
+
+    def summary(self) -> str:
+        out = (
+            f"{self.phase}: {self.tokens} tok in {self.seconds:.2f}s "
+            f"({self.tokens_per_second:.1f} tok/s, {self.calls} calls)"
+        )
+        if self.joules is not None:
+            out += (
+                f", {self.joules:.1f} J"
+                f" [{self.joules_per_token:.3g} J/tok, {self.provenance}]"
+            )
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineStats:
+    """One engine lifetime in numbers."""
+
+    steps: int
+    requests_submitted: int
+    requests_completed: int
+    prefill_calls: int
+    decode_steps: int
+    tokens_generated: int
+    slot_reuses: int
+    max_active: int
+
+
+class ServeEngine:
+    """Request-level serving engine over the block-pattern LM.
+
+    ``cfg`` is an :class:`ArchConfig` (or an arch name, resolved through
+    ``get_config``).  ``plan_dir``/``plan_keys`` bind each phase to a
+    committed offload plan: with ``plan_dir`` alone the stored
+    ``zoo:<arch>:prefill`` / ``zoo:<arch>:decode`` plans apply when
+    present (and compatible with this environment); ``plan_keys`` may name
+    explicit keys per phase or one key for both.  ``sampler`` is the
+    default :class:`Sampler` for requests that don't carry their own.
+    ``meter`` (name or ``PowerMeter``) adds per-phase energy telemetry.
+
+    ``prefill_bucket`` pads prompts up to a multiple of the bucket so
+    prefill traces are shared across prompt lengths — attention-family
+    archs only (padded tokens would corrupt a recurrent SSM state; the
+    padded KV rows here are provably never attended: each decode step
+    overwrites position ``index`` before the mask ever admits it).
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig | str,
+        *,
+        params: Any = None,
+        n_slots: int = 4,
+        max_len: int = 256,
+        sampler: Sampler | None = None,
+        meter: Any = None,
+        plan_dir: str | None = None,
+        plan_keys: "dict[str, str | None] | str | None" = None,
+        max_tokens_per_step: int | None = None,
+        prefill_bucket: int | None = None,
+        monitor: StepMonitor | None = None,
+        seed: int = 0,
+        quiet: bool = True,
+    ) -> None:
+        if isinstance(cfg, str):
+            cfg = get_config(cfg)
+        if cfg.frontend == "patch_embed":
+            raise ValueError(
+                f"{cfg.name}: patch-embed frontends have no token prompt "
+                "path; the serving engine takes token-id requests"
+            )
+        if prefill_bucket is not None and "m" in cfg.pattern():
+            raise ValueError(
+                "prefill_bucket pads prompts, which corrupts recurrent SSM "
+                f"state — unsupported for '{cfg.name}' "
+                f"(pattern {cfg.pattern()!r})"
+            )
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.sampler = sampler or Sampler.greedy()
+        self.meter = resolve_meter(meter)
+        self.seed = seed
+        self.quiet = quiet
+        self.prefill_bucket = prefill_bucket
+        self.monitor = monitor or StepMonitor()
+        self.scheduler = Scheduler(
+            n_slots,
+            max_tokens_per_step,
+            prompt_cost=lambda n: self._padded_len(n),
+        )
+
+        self.params = (
+            params if params is not None else lm.init_params(cfg, seed=seed)
+        )
+        self.cache = lm.init_cache(cfg, n_slots, max_len)
+
+        # -- plan-aware phase dispatch ------------------------------------
+        # keys the caller named explicitly must fail loudly when they
+        # cannot bind (mirrors resolve_meter: an explicit request is a
+        # contract, not a hint); store-derived defaults degrade silently
+        explicit = plan_keys is not None
+        if explicit and not plan_dir:
+            raise ValueError(
+                "plan_keys given without plan_dir — both are required to "
+                "bind a committed plan"
+            )
+        self.plan_keys = self._resolve_plan_keys(plan_dir, plan_keys)
+        self._bindings: dict[str, dict[str, str] | None] = {}
+        for phase in PHASES:
+            key = self.plan_keys[phase]
+            mapping = (
+                stored_binding(plan_dir, key)
+                if plan_dir and key
+                else None
+            )
+            if key and mapping is None:
+                if explicit:
+                    raise ValueError(
+                        f"plan '{key}' for phase '{phase}' not "
+                        f"found/compatible in {plan_dir}"
+                    )
+                if not quiet:
+                    print(
+                        f"serve: plan '{key}' not found/compatible in "
+                        f"{plan_dir}; {phase} runs on default bindings"
+                    )
+            elif mapping and not quiet:
+                print(f"serve: {phase} bound to plan '{key}': {mapping}")
+            self._bindings[phase] = mapping
+
+        # the cache arguments are donated: the old cache is dead the moment
+        # a step returns its successor, and without donation every decode
+        # step / admission would copy the full multi-layer KV cache
+        self._prefill_fn = jax.jit(self._build_prefill())
+        self._decode_fn = jax.jit(self._build_decode(), donate_argnums=(2,))
+        self._insert_fn = jax.jit(self._insert_slot, donate_argnums=(0,))
+
+        # host-side per-slot state mirrors (pushed each decode step)
+        self._last_tok = np.zeros((n_slots, 1), np.int32)
+        self._seeds = np.zeros((n_slots,), np.int32)
+        self._gen_counts = np.zeros((n_slots,), np.int32)
+        self._temps = np.zeros((n_slots,), np.float32)
+        self._topks = np.zeros((n_slots,), np.int32)
+
+        self.telemetry = {p: PhaseTelemetry(p) for p in PHASES}
+        self.completions: dict[int, Completion] = {}
+        self._finished: list[Completion] = []
+        self._next_id = 0
+        self._submitted = 0
+        self._steps = 0
+        self._max_active = 0
+
+    # -- plan resolution ------------------------------------------------------
+    def _resolve_plan_keys(
+        self,
+        plan_dir: str | None,
+        plan_keys: "dict[str, str | None] | str | None",
+    ) -> dict[str, str | None]:
+        if isinstance(plan_keys, str):
+            return {p: plan_keys for p in PHASES}
+        if plan_keys is not None:
+            unknown = set(plan_keys) - set(PHASES)
+            if unknown:
+                raise KeyError(
+                    f"unknown serve phases {sorted(unknown)}; known: {PHASES}"
+                )
+            return {p: plan_keys.get(p) for p in PHASES}
+        if plan_dir:
+            from repro.offload.zoo import default_plan_key
+
+            # zoo plans are keyed by the *base* arch — a reduced config
+            # (verification-environment shape) binds the same plans
+            arch = self.cfg.name.removesuffix("-reduced")
+            return {
+                p: default_plan_key(plan_dir, arch, p) for p in PHASES
+            }
+        return {p: None for p in PHASES}
+
+    def _phase(self, phase: str):
+        mapping = self._bindings.get(phase)
+        if not mapping:
+            return contextlib.nullcontext()
+        return blocks_mod.registry.bind(mapping)
+
+    # -- jitted programs -------------------------------------------------------
+    def _build_prefill(self):
+        cfg = self.cfg
+        cache_metas = lm.cache_metas_tree(cfg, 1, self.max_len)
+
+        def prefill_fn(params, tokens, last_idx, seed, temp, topk):
+            """tokens (1, Lp) -> (first sampled token (1,), filled b1 cache).
+
+            The zero cache is built *inside* the program (XLA fuses it to
+            nothing), only the *last real position*'s hidden state reaches
+            the head — the (1, Lp, V) logits tensor is never materialised
+            — and padded bucket positions past ``last_idx`` are ignored.
+            """
+            from repro.models import params as pm
+
+            cache = pm.init_params(cache_metas, 0)
+            x, _, new_cache = lm.backbone(
+                params, {"tokens": tokens}, cfg, "prefill", cache
+            )
+            x_last = jax.lax.dynamic_slice_in_dim(x, last_idx, 1, axis=1)
+            logits = lm.head(params, x_last, cfg)[:, 0, : cfg.vocab_size]
+            tok = sample_tokens(
+                logits,
+                seed[None],
+                jnp.zeros((1,), jnp.int32),
+                temp[None],
+                topk[None],
+            )
+            new_cache["index"] = (last_idx + 1)[None].astype(jnp.int32)
+            return tok, new_cache
+
+        return prefill_fn
+
+    def _build_decode(self):
+        cfg = self.cfg
+
+        def decode_fn(params, tokens, cache, seeds, steps, temps, topks):
+            """One fused (logits -> token) step for the whole slot batch."""
+            logits, new_cache = lm.decode_step(params, tokens, cfg, cache)
+            tok = sample_tokens(
+                logits[:, 0, : cfg.vocab_size], seeds, steps, temps, topks
+            )
+            return tok, new_cache
+
+        return decode_fn
+
+    @staticmethod
+    def _insert_slot(cache, b1_cache, slot):
+        """Write a batch-1 prefilled cache into slot ``slot`` of the engine
+        cache.  Group leaves are (layers, B, ...); ``index`` is (B,)."""
+        out = {}
+        for key, value in cache.items():
+            if key == "index":
+                out[key] = value.at[slot].set(b1_cache[key][0])
+            else:
+                out[key] = jax.tree.map(
+                    lambda dst, src: dst.at[:, slot].set(src[:, 0]),
+                    value,
+                    b1_cache[key],
+                )
+        return out
+
+    # -- public API ------------------------------------------------------------
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its request id.  Admission happens on a
+        subsequent ``step()`` when a slot and token budget are available."""
+        total = len(request.prompt) + request.max_new_tokens
+        if total > self.max_len:
+            raise ValueError(
+                f"request needs {total} cache positions "
+                f"(prompt {len(request.prompt)} + {request.max_new_tokens} "
+                f"new) but slots hold max_len={self.max_len}"
+            )
+        request_id = self._next_id
+        self._next_id += 1
+        self._submitted += 1
+        seed = (
+            request.seed
+            if request.seed is not None
+            else (self.seed * 1_000_003 + request_id) & 0x7FFFFFFF
+        )
+        self.scheduler.enqueue(
+            RequestState(
+                request_id=request_id,
+                request=request,
+                slot=-1,
+                seed=seed,
+                submitted_at=time.perf_counter(),
+            )
+        )
+        return request_id
+
+    def step(self) -> list[Token | Completion]:
+        """One scheduling round: admissions (a prefill each), then one fused
+        decode step over every active slot.  Returns the streamed events —
+        ``Token`` per generated token, ``Completion`` per finished request
+        — in generation order."""
+        if not self.scheduler.has_work:
+            return []
+        self._steps += 1
+        events: list[Token | Completion] = []
+        admitted = self.scheduler.admissions()
+        # concurrency peaks right after admission, before same-step
+        # finishes release their slots — sample it here, not at step end
+        self._max_active = max(self._max_active, len(self.scheduler.active))
+        for state in admitted:
+            events.extend(self._admit(state))
+        if self.scheduler.active:
+            events.extend(self._decode_active())
+        return events
+
+    def run_until_idle(self, max_steps: int | None = None) -> list[Completion]:
+        """Drive ``step()`` until every submitted request has completed;
+        returns the completions in finish order."""
+        start = len(self._finished)
+        steps = 0
+        while self.scheduler.has_work:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError(
+                    f"engine still busy after {max_steps} steps "
+                    f"({len(self.scheduler.active)} active, "
+                    f"{len(self.scheduler.waiting)} waiting)"
+                )
+        return self._finished[start:]
+
+    def stream(
+        self, requests: Iterable[Request]
+    ) -> "Iterable[Token | Completion]":
+        """Submit ``requests`` and yield events until idle (convenience)."""
+        for request in requests:
+            self.submit(request)
+        while self.scheduler.has_work:
+            yield from self.step()
+
+    def reset_stats(self) -> None:
+        """Zero every lifetime counter — telemetry, monitor, scheduler
+        reuse accounting, completions — without touching the compiled
+        programs or the cache.  For load generators that warm the traces
+        up front and must not report the warmup as served traffic.  Only
+        valid on an idle engine (no active or waiting requests)."""
+        if self.scheduler.has_work:
+            raise RuntimeError("reset_stats on a busy engine")
+        self.telemetry = {p: PhaseTelemetry(p) for p in PHASES}
+        self.monitor = StepMonitor(
+            window=self.monitor.window.maxlen or 32,
+            threshold=self.monitor.threshold,
+            patience=self.monitor.patience,
+            on_straggler=self.monitor.on_straggler,
+        )
+        self.scheduler.admitted_per_slot.clear()
+        self.completions.clear()
+        self._finished.clear()
+        self._submitted = 0
+        self._steps = 0
+        self._max_active = 0
+
+    @property
+    def stats(self) -> EngineStats:
+        return EngineStats(
+            steps=self._steps,
+            requests_submitted=self._submitted,
+            requests_completed=len(self._finished),
+            prefill_calls=self.telemetry["prefill"].calls,
+            decode_steps=self.telemetry["decode"].calls,
+            tokens_generated=sum(
+                len(c.tokens) for c in self._finished
+            ) + sum(
+                len(s.tokens) for s in self.scheduler.active.values()
+            ),
+            slot_reuses=self.scheduler.slot_reuses,
+            max_active=self._max_active,
+        )
+
+    # -- phase execution -------------------------------------------------------
+    def _padded_len(self, length: int) -> int:
+        if self.prefill_bucket:
+            bucket = self.prefill_bucket
+            length = min(-(-length // bucket) * bucket, self.max_len)
+        return length
+
+    def _padded_prompt(self, prompt: Sequence[int]) -> np.ndarray:
+        out = np.zeros((1, self._padded_len(len(prompt))), np.int32)
+        out[0, : len(prompt)] = prompt
+        return out
+
+    def _request_knobs(self, state: RequestState) -> tuple[float, int]:
+        return (state.request.sampling or self.sampler).knobs
+
+    def _admit(self, state: RequestState) -> list[Token | Completion]:
+        request = state.request
+        temp, topk = self._request_knobs(state)
+        tokens = self._padded_prompt(request.prompt)
+        with self._phase("prefill"), meter_window(self.meter) as tele:
+            tok, b1_cache = self._prefill_fn(
+                self.params,
+                jnp.asarray(tokens),
+                jnp.asarray(len(request.prompt) - 1, jnp.int32),
+                jnp.asarray(state.seed, jnp.int32),
+                jnp.asarray(temp, jnp.float32),
+                jnp.asarray(topk, jnp.int32),
+            )
+            self.cache = self._insert_fn(
+                self.cache, b1_cache, jnp.asarray(state.slot, jnp.int32)
+            )
+            first = int(np.asarray(tok)[0])  # blocks inside the meter window
+        self.telemetry["prefill"].add(tele, len(request.prompt))
+
+        slot = state.slot
+        self._last_tok[slot, 0] = first
+        self._seeds[slot] = state.seed
+        self._gen_counts[slot] = 1
+        self._temps[slot] = temp
+        self._topks[slot] = topk
+        state.first_token_at = time.perf_counter()
+        state.tokens.append(first)
+        events: list[Token | Completion] = [
+            Token(state.request_id, first, 0, "prefill", self._steps)
+        ]
+        if state.done:
+            events.append(self._finish(slot))
+        return events
+
+    def _decode_active(self) -> list[Token | Completion]:
+        active = dict(self.scheduler.active)  # slot -> state
+        self.monitor.start()
+        with self._phase("decode"), meter_window(self.meter) as tele:
+            tok, self.cache = self._decode_fn(
+                self.params,
+                jnp.asarray(self._last_tok),
+                self.cache,
+                jnp.asarray(self._seeds),
+                jnp.asarray(self._gen_counts),
+                jnp.asarray(self._temps),
+                jnp.asarray(self._topks),
+            )
+            toks = np.asarray(tok)  # the only device->host transfer: (B,)
+        self.monitor.stop(self._steps)
+        self.telemetry["decode"].add(tele, len(active))
+
+        events: list[Token | Completion] = []
+        for slot, state in active.items():
+            token = int(toks[slot])
+            self._last_tok[slot, 0] = token
+            self._gen_counts[slot] += 1
+            index = len(state.tokens)
+            state.tokens.append(token)
+            events.append(
+                Token(state.request_id, token, index, "decode", self._steps)
+            )
+            if state.done:
+                events.append(self._finish(slot))
+        return events
+
+    def _finish(self, slot: int) -> Completion:
+        state = self.scheduler.release(slot)
+        self._gen_counts[slot] = 0
+        completion = Completion(
+            request_id=state.request_id,
+            prompt=state.request.prompt,
+            tokens=tuple(state.tokens),
+            finish_reason=state.finish_reason,
+            submitted_at=state.submitted_at,
+            first_token_at=state.first_token_at or time.perf_counter(),
+            finished_at=time.perf_counter(),
+        )
+        self.completions[state.request_id] = completion
+        self._finished.append(completion)
+        return completion

@@ -396,6 +396,9 @@ def test_autodetect_fallback_order(monkeypatch):
         meters_mod.NvmlMeter, "available", avail("nvml", False)
     )
     monkeypatch.setattr(
+        meters_mod.TpuMeter, "available", avail("tpu", False)
+    )
+    monkeypatch.setattr(
         meters_mod.RaplMeter, "available", avail("rapl", False)
     )
     monkeypatch.setattr(
@@ -403,7 +406,8 @@ def test_autodetect_fallback_order(monkeypatch):
     )
     meter = meters_mod.autodetect()
     assert isinstance(meter, TimeProportionalPower)
-    assert calls == ["nvml", "rapl", "psutil"]  # hardware counters first
+    # accelerator counters first; TPU telemetry ahead of the CPU models
+    assert calls == ["nvml", "tpu", "rapl", "psutil"]
 
 
 def test_autodetect_stops_at_first_available(monkeypatch):

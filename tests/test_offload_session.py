@@ -357,23 +357,20 @@ def test_measure_block_pattern_shim_matches_session():
     assert [p for p, _ in results] == patterns
 
 
-def test_launch_plans_shims_delegate(tmp_path):
-    from repro.launch import plans
-
+def test_attach_is_the_only_production_bind_path(tmp_path):
+    """The historical launch.plans shims are gone: stored_binding +
+    OffloadSession.attach are the one production loading surface."""
     reg = _toy_registry()
     OffloadSession(
         _toy_binding_space(reg), args=(1,), repeats=1,
         store=str(tmp_path), key="shim:plans",
     ).run(verify=False)
     blocks.registry.register("norm", "xla", lambda x: x)
-    assert plans.load_plan_bindings(str(tmp_path), "shim:plans") == {
-        "norm": "xla"
-    }
-    assert plans.load_plan_bindings(str(tmp_path), "shim:plans") == (
-        stored_binding(str(tmp_path), "shim:plans")
-    )
-    with plans.plan_binding_context(str(tmp_path), "shim:plans"):
+    assert stored_binding(str(tmp_path), "shim:plans") == {"norm": "xla"}
+    with OffloadSession.attach(str(tmp_path), "shim:plans", quiet=True):
         assert blocks.registry.current_pattern()["norm"] == "xla"
+    with pytest.raises(ModuleNotFoundError):
+        import repro.launch.plans  # noqa: F401 — deleted shim stays deleted
 
 
 # -- kernel-shelf fingerprint -------------------------------------------------

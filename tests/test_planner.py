@@ -286,9 +286,9 @@ def test_plan_store_fingerprint_mismatch_forces_research(tmp_path):
 
 
 def test_serve_loads_and_binds_plan_without_measurement(tmp_path):
-    """The production path: a plan saved by one process is loaded by
-    launch/serve.py helpers and bound via blocks.bind with zero search."""
-    from repro.launch.serve import load_plan_bindings
+    """The production path: a plan saved by one process is loaded via
+    repro.offload.stored_binding and bound via blocks.bind, zero search."""
+    from repro.offload import stored_binding
 
     counter = {"calls": 0}
     space = _binding_space_with_counter(counter)
@@ -300,7 +300,7 @@ def test_serve_loads_and_binds_plan_without_measurement(tmp_path):
 
     # the global registry must know the plan's block for it to be loadable
     blocks.registry.register("norm", "xla", lambda x: x)
-    mapping = load_plan_bindings(str(tmp_path), "serve:prod")
+    mapping = stored_binding(str(tmp_path), "serve:prod")
     assert mapping == {"norm": "xla"}
     # loading measured nothing and never invoked a block implementation
     assert counter["calls"] == calls_after_search
@@ -314,9 +314,9 @@ def test_serve_loads_and_binds_plan_without_measurement(tmp_path):
     assert seen == [7]
 
 
-def test_load_plan_bindings_rejects_stale_registry_mapping(tmp_path):
+def test_stored_binding_rejects_stale_registry_mapping(tmp_path):
     """A plan naming a block/target that no longer exists must not bind."""
-    from repro.launch.plans import load_plan_bindings
+    from repro.offload import stored_binding
 
     plan = Plan(
         key="stale", space="sig", mapping={"ghost_block": "pallas"},
@@ -326,7 +326,7 @@ def test_load_plan_bindings_rejects_stale_registry_mapping(tmp_path):
         fingerprint=planner.environment_fingerprint(), created_unix=0.0,
     )
     PlanStore(tmp_path).save(plan)
-    assert load_plan_bindings(str(tmp_path), "stale") is None
+    assert stored_binding(str(tmp_path), "stale") is None
 
 
 def test_cache_distinguishes_workloads_with_same_axes():

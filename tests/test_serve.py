@@ -1,0 +1,369 @@
+"""Serving-engine tests: continuous batching, streaming, sampling, plans.
+
+All on the reduced llama config (non-MoE: MoE capacity drops depend on
+batch composition, which would make cross-batch parity checks meaningless).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.planner import Plan, PlanStore
+from repro.core.planner.store import environment_fingerprint
+from repro.serve import (
+    Completion,
+    Request,
+    Sampler,
+    ServeEngine,
+    Token,
+)
+
+CFG = get_config("llama3.2-1b").reduced()
+
+
+def _prompt(rng, n):
+    return rng.integers(0, CFG.vocab_size, n).tolist()
+
+
+def _engine(**kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("seed", 0)
+    return ServeEngine(CFG, **kw)
+
+
+# -- scheduling ---------------------------------------------------------------
+
+
+def test_slot_admission_eviction_staggered(rng):
+    """More requests than slots, staggered lengths: every request completes,
+    freed slots are reused mid-flight, concurrency never exceeds n_slots."""
+    engine = _engine(n_slots=2)
+    lengths = [(5, 6), (9, 3), (4, 8), (7, 2), (6, 5)]
+    ids = [
+        engine.submit(Request(_prompt(rng, p), max_new_tokens=g))
+        for p, g in lengths
+    ]
+    completions = engine.run_until_idle(max_steps=500)
+    assert sorted(c.request_id for c in completions) == ids
+    for (plen, gen), rid in zip(lengths, ids):
+        c = engine.completions[rid]
+        assert len(c.tokens) == gen
+        assert c.finish_reason == "length"
+        assert len(c.prompt) == plen
+    stats = engine.stats
+    assert stats.requests_completed == 5
+    assert stats.max_active <= 2
+    # the continuous-batching signature: served > n_slots requests in one
+    # lifetime, so at least one slot was reused after an eviction
+    assert stats.slot_reuses >= 3
+    assert stats.decode_steps > 0
+
+
+def test_scheduler_token_budget_defers_admissions(rng):
+    """A tight token budget admits the queue gradually instead of
+    prefilling everything into the first step — but never deadlocks."""
+    engine = _engine(n_slots=4, max_tokens_per_step=12)
+    for _ in range(4):
+        engine.submit(Request(_prompt(rng, 10), max_new_tokens=3))
+    first = engine.step()
+    admitted_first = sum(
+        1 for e in first if isinstance(e, Token) and e.phase == "prefill"
+    )
+    assert admitted_first == 1  # 10 prompt tokens: a second admission > 12
+    engine.run_until_idle(max_steps=200)
+    assert engine.stats.requests_completed == 4
+
+
+def test_token_budget_charges_bucket_padded_prefill_cost(rng):
+    """The budget bounds the tokens the prefill *program* runs, which with
+    bucketing is the padded length, not the nominal prompt length."""
+    engine = _engine(
+        n_slots=4, max_tokens_per_step=20, prefill_bucket=16
+    )
+    for _ in range(3):
+        engine.submit(Request(_prompt(rng, 10), max_new_tokens=2))
+    first = engine.step()
+    admitted = sum(
+        1 for e in first if isinstance(e, Token) and e.phase == "prefill"
+    )
+    assert admitted == 1  # padded cost 16; a second padded 16 busts 20
+    engine.run_until_idle(max_steps=100)
+    assert engine.stats.requests_completed == 3
+
+
+def test_max_active_counts_same_step_finishers(rng):
+    """Requests that finish inside the step they were admitted still count
+    toward peak concurrency."""
+    engine = _engine(n_slots=2)
+    engine.submit(Request(_prompt(rng, 4), max_new_tokens=1))
+    engine.submit(Request(_prompt(rng, 5), max_new_tokens=1))
+    engine.run_until_idle(max_steps=20)
+    assert engine.stats.max_active == 2
+
+
+def test_submit_rejects_oversized_request(rng):
+    engine = _engine(max_len=16)
+    with pytest.raises(ValueError, match="cache positions"):
+        engine.submit(Request(_prompt(rng, 10), max_new_tokens=10))
+
+
+# -- streaming ----------------------------------------------------------------
+
+
+def test_streaming_token_order(rng):
+    """Events stream in generation order: per request, token indices are
+    0..n-1, token 0 comes from prefill, the rest from decode, and the
+    Completion event arrives after its final token with the same ids."""
+    engine = _engine(n_slots=2)
+    reqs = [Request(_prompt(rng, 4 + i), max_new_tokens=3 + i)
+            for i in range(3)]
+    events = list(engine.stream(reqs))
+    by_request: dict[int, list] = {}
+    for event in events:
+        by_request.setdefault(event.request_id, []).append(event)
+    assert len(by_request) == 3
+    for rid, evs in by_request.items():
+        *tokens, completion = evs
+        assert isinstance(completion, Completion)
+        assert [t.index for t in tokens] == list(range(len(tokens)))
+        assert tokens[0].phase == "prefill"
+        assert all(t.phase == "decode" for t in tokens[1:])
+        assert tuple(t.token_id for t in tokens) == completion.tokens
+        assert completion.ttft <= completion.latency
+
+
+# -- sampling -----------------------------------------------------------------
+
+
+def test_sampler_determinism_under_fixed_seed(rng):
+    """A request's sample path depends only on (seed, token index): the
+    same request replayed in a different batch composition — different
+    slot, different neighbours — yields the identical token sequence."""
+    prompt = _prompt(rng, 6)
+    req = lambda: Request(
+        prompt, max_new_tokens=8,
+        sampling=Sampler.with_temperature(0.8), seed=1234,
+    )
+    solo = _engine(n_slots=1)
+    solo.submit(req())
+    tokens_alone = solo.run_until_idle(max_steps=100)[0].tokens
+
+    crowded = _engine(n_slots=3)
+    filler = [Request(_prompt(rng, 9), max_new_tokens=4,
+                      sampling=Sampler.with_top_k(20, 1.1))
+              for _ in range(2)]
+    crowded.submit(filler[0])
+    crowded.submit(filler[1])
+    rid = crowded.submit(req())
+    crowded.run_until_idle(max_steps=200)
+    assert crowded.completions[rid].tokens == tokens_alone
+
+
+def test_sampler_policies_differ_and_validate():
+    logits_seedless = Request((1, 2, 3), sampling=Sampler.greedy())
+    assert logits_seedless.sampling.knobs == (0.0, 0)
+    assert Sampler.with_temperature(0.7).knobs == (0.7, 0)
+    assert Sampler.with_top_k(40, 0.8).knobs == (0.8, 40)
+    assert Sampler.parse("top_k:40:0.8") == Sampler.with_top_k(40, 0.8)
+    with pytest.raises(ValueError, match="sampler spec"):
+        Sampler.parse("temperature")  # truncated spec: no bare IndexError
+    with pytest.raises(ValueError, match="sampler spec"):
+        Sampler.parse("top_k")
+    with pytest.raises(ValueError):
+        Sampler.with_temperature(0.0)
+    with pytest.raises(ValueError):
+        Sampler("top_k", temperature=1.0, top_k=0)
+    with pytest.raises(ValueError):
+        Sampler("nucleus")
+
+
+def test_greedy_continuous_batching_matches_isolated_decode(rng):
+    """Numerical integrity of the slot-managed cache: a greedy request
+    decoded while other requests churn through neighbouring slots emits
+    exactly the tokens it emits on an otherwise-empty engine."""
+    cfg = dataclasses.replace(CFG, compute_dtype="float32", remat="none")
+    prompt = _prompt(rng, 7)
+    alone = ServeEngine(cfg, n_slots=1, max_len=64, seed=0)
+    alone.submit(Request(prompt, max_new_tokens=10))
+    expected = alone.run_until_idle(max_steps=100)[0].tokens
+
+    busy = ServeEngine(cfg, n_slots=3, max_len=64, seed=0)
+    busy.submit(Request(_prompt(rng, 3), max_new_tokens=2))
+    busy.submit(Request(_prompt(rng, 11), max_new_tokens=6))
+    rid = busy.submit(Request(prompt, max_new_tokens=10))
+    busy.submit(Request(_prompt(rng, 5), max_new_tokens=9))  # reuses a slot
+    busy.run_until_idle(max_steps=300)
+    assert busy.completions[rid].tokens == expected
+    assert busy.stats.slot_reuses >= 1
+
+
+def test_prefill_bucketing_preserves_outputs(rng):
+    """Bucket-padded prefill shares traces across prompt lengths without
+    changing any output: padded KV rows are overwritten before the decode
+    mask ever admits them."""
+    cfg = dataclasses.replace(CFG, compute_dtype="float32", remat="none")
+    prompts = [_prompt(rng, n) for n in (5, 7, 11)]
+
+    def tokens_of(engine):
+        ids = [engine.submit(Request(p, max_new_tokens=6)) for p in prompts]
+        engine.run_until_idle(max_steps=200)
+        return [engine.completions[i].tokens for i in ids]
+
+    exact = tokens_of(ServeEngine(cfg, n_slots=2, max_len=64, seed=0))
+    bucketed_engine = ServeEngine(
+        cfg, n_slots=2, max_len=64, seed=0, prefill_bucket=8
+    )
+    assert tokens_of(bucketed_engine) == exact
+
+    with pytest.raises(ValueError, match="SSM"):
+        ServeEngine(
+            get_config("mamba2-2.7b").reduced(), prefill_bucket=8
+        )
+
+
+# -- plan-aware phase dispatch -------------------------------------------------
+
+
+def _store_with_zoo_plans(tmp_path, mapping):
+    store = PlanStore(tmp_path)
+    for kind in ("prefill", "decode"):
+        store.save(Plan(
+            key=f"zoo:llama3.2-1b:{kind}", space="sig",
+            mapping=dict(mapping), pattern=tuple(mapping),
+            baseline_seconds=1.0, best_seconds=0.5, speedup=2.0,
+            strategy="exhaustive", evaluations=2, search_seconds=0.1,
+            fingerprint=environment_fingerprint(), created_unix=0.0,
+        ))
+    return store
+
+
+def test_plan_bound_phases_match_default_binding_outputs(rng, tmp_path):
+    """With a zoo store present the engine binds each phase to its
+    committed plan (both keys resolve, mappings attach) and — the paper's
+    verify contract — the bound pattern reproduces the default-binding
+    outputs."""
+    cfg = dataclasses.replace(CFG, compute_dtype="float32", remat="none")
+    _store_with_zoo_plans(tmp_path, {"rmsnorm": "ref", "attention": "ref"})
+    prompts = [_prompt(rng, n) for n in (5, 9)]
+
+    def run(**kw):
+        engine = ServeEngine(cfg, n_slots=2, max_len=64, seed=0, **kw)
+        ids = [engine.submit(Request(p, max_new_tokens=5)) for p in prompts]
+        engine.run_until_idle(max_steps=200)
+        return engine, [engine.completions[i].tokens for i in ids]
+
+    default_engine, default_tokens = run()
+    bound_engine, bound_tokens = run(plan_dir=str(tmp_path))
+
+    assert default_engine.plan_keys == {"prefill": None, "decode": None}
+    assert bound_engine.plan_keys == {
+        "prefill": "zoo:llama3.2-1b:prefill",
+        "decode": "zoo:llama3.2-1b:decode",
+    }
+    assert bound_engine._bindings["decode"] == {
+        "rmsnorm": "ref", "attention": "ref"
+    }
+    assert bound_tokens == default_tokens
+
+
+def test_explicit_plan_key_binds_both_phases(tmp_path, rng):
+    store = PlanStore(tmp_path)
+    store.save(Plan(
+        key="custom:both", space="sig", mapping={"rmsnorm": "ref"},
+        pattern=("rmsnorm",), baseline_seconds=1.0, best_seconds=0.5,
+        speedup=2.0, strategy="exhaustive", evaluations=2,
+        search_seconds=0.1, fingerprint=environment_fingerprint(),
+        created_unix=0.0,
+    ))
+    engine = _engine(plan_dir=str(tmp_path), plan_keys="custom:both")
+    assert engine.plan_keys == {
+        "prefill": "custom:both", "decode": "custom:both"
+    }
+    assert engine._bindings["prefill"] == {"rmsnorm": "ref"}
+    engine.submit(Request(_prompt(rng, 4), max_new_tokens=2))
+    assert engine.run_until_idle(max_steps=50)[0].tokens
+
+
+def test_explicit_plan_key_fails_loudly(tmp_path, rng):
+    """A key the caller *named* must bind or raise — never silently fall
+    back to default bindings (the resolve_meter contract); store-derived
+    defaults still degrade quietly."""
+    with pytest.raises(ValueError, match="not.*found/compatible"):
+        _engine(plan_dir=str(tmp_path), plan_keys="zoo:llama3.2-1b:typo")
+    with pytest.raises(ValueError, match="without plan_dir"):
+        _engine(plan_keys="zoo:llama3.2-1b:prefill")
+
+
+def test_reset_stats_zeroes_counters_only_when_idle(rng):
+    engine = _engine()
+    engine.submit(Request(_prompt(rng, 4), max_new_tokens=2))
+    with pytest.raises(RuntimeError, match="busy"):
+        engine.reset_stats()
+    engine.run_until_idle(max_steps=50)
+    assert engine.stats.requests_completed == 1
+    engine.reset_stats()
+    stats = engine.stats
+    assert stats.requests_completed == 0
+    assert stats.requests_submitted == 0
+    assert stats.steps == 0
+    assert stats.slot_reuses == 0
+    assert engine.telemetry["decode"].calls == 0
+    assert engine.monitor.steps == 0
+    # the engine still serves after a reset (programs/cache untouched)
+    engine.submit(Request(_prompt(rng, 4), max_new_tokens=2))
+    assert len(engine.run_until_idle(max_steps=50)) == 1
+
+
+def test_missing_plan_degrades_to_default_bindings(tmp_path, rng):
+    """An empty store (or an incompatible plan) must serve, not crash."""
+    engine = _engine(plan_dir=str(tmp_path))
+    assert engine.plan_keys == {"prefill": None, "decode": None}
+    engine.submit(Request(_prompt(rng, 4), max_new_tokens=2))
+    assert len(engine.run_until_idle(max_steps=50)) == 1
+
+
+# -- telemetry -----------------------------------------------------------------
+
+
+def test_phase_telemetry_provenance_fields(rng):
+    """Per-phase telemetry carries seconds/joules/provenance: a meter
+    stamps its provenance, no meter means timing only."""
+    metered = _engine(meter="psutil")
+    metered.submit(Request(_prompt(rng, 5), max_new_tokens=4))
+    metered.run_until_idle(max_steps=50)
+    for phase in ("prefill", "decode"):
+        tele = metered.telemetry[phase]
+        assert tele.calls > 0
+        assert tele.seconds > 0
+        assert tele.tokens > 0
+        assert tele.joules is not None and tele.joules > 0
+        assert tele.provenance == "estimated"  # psutil is a model
+        assert tele.joules_per_token > 0
+        assert phase in tele.summary() and "J/tok" in tele.summary()
+
+    unmetered = _engine()
+    unmetered.submit(Request(_prompt(rng, 5), max_new_tokens=4))
+    unmetered.run_until_idle(max_steps=50)
+    tele = unmetered.telemetry["decode"]
+    assert tele.seconds > 0 and tele.joules is None
+    assert tele.provenance is None
+
+    assert metered.monitor.steps > 0  # StepMonitor hooked into decode
+
+
+def test_tpu_meter_degrades_cleanly_off_tpu():
+    from repro.metering import METER_PROBE_ORDER, TpuMeter, resolve_meter
+
+    names = [n for n, _ in METER_PROBE_ORDER]
+    # the ROADMAP item: TPU telemetry probes ahead of the CPU models
+    assert names.index("tpu") < names.index("rapl")
+    assert names.index("tpu") < names.index("psutil")
+    assert TpuMeter.provenance == "measured"
+    if not TpuMeter.available():  # this container: no libtpu telemetry
+        with pytest.raises(RuntimeError):
+            TpuMeter()
+        with pytest.raises(RuntimeError):
+            resolve_meter("tpu")
