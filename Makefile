@@ -29,6 +29,12 @@ report:
 serve-bench:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --meter auto
 
+# Same trace on the block-paged KV cache (chunked prefill on): pool
+# utilization / stranded / fragmentation stats alongside the tok/s numbers.
+.PHONY: serve-bench-paged
+serve-bench-paged:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --meter auto --page-size 16 --prefill-chunk 8
+
 .PHONY: deps-dev
 deps-dev:
 	$(PYTHON) -m pip install -r requirements-dev.txt

@@ -31,6 +31,7 @@ sys.path.insert(
 from repro.launch.serve import (  # noqa: E402
     add_engine_args,
     build_engine,
+    format_kv_metrics,
     make_requests,
     percentile,
 )
@@ -134,6 +135,7 @@ def main() -> None:
     print(f"continuous batching: {stats.slot_reuses} slot reuses, "
           f"max {stats.max_active} concurrent, "
           f"{stats.steps} engine steps")
+    print(format_kv_metrics(engine))
 
 
 if __name__ == "__main__":

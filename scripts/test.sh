@@ -10,7 +10,7 @@ case "$mode" in
   fast)
     exec python -m pytest -q \
       tests/test_planner.py tests/test_offload_session.py \
-      tests/test_metering.py tests/test_serve.py \
+      tests/test_metering.py tests/test_serve.py tests/test_serve_kv.py \
       tests/test_verify.py tests/test_ga.py \
       tests/test_engine.py tests/test_blocks.py tests/test_core_ast.py \
       tests/test_pattern_db.py tests/test_similarity.py \

@@ -193,7 +193,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         batch_abs = steps.input_specs(cfg, shape)
         bshard = batch_shardings(batch_abs)
         cache_metas = lm.cache_metas_tree(cfg, shape.global_batch, shape.seq_len)
-        cache_abs = pm.abstract_params(cache_metas)
+        cache_abs = steps.abstract_cache(cfg, shape)
         cspec = pm.spec_tree(cache_metas, rules)
         cshard = _named(cspec, mesh)
         fn = steps.make_decode_step(cfg)

@@ -36,6 +36,32 @@ def percentile(xs: "list[float]", q: float) -> float:
     return float(np.percentile(xs, q * 100))
 
 
+def format_kv_metrics(engine: ServeEngine) -> str:
+    """One line of KV-memory health from ``engine.metrics()`` (shared with
+    serve_load.py).  Stranded/utilization/fragmentation are means of one
+    sample per engine step while requests were resident."""
+    m = engine.metrics()
+    kv = m["kv"]
+    if m["mode"] == "paged":
+        return (
+            f"kv pool: {kv['n_pages']} x {kv['page_size']}-token pages, "
+            f"peak {kv['peak_used_pages']} used "
+            f"({100.0 * kv['peak_used_pages'] / kv['n_pages']:.0f}% peak, "
+            f"{m['mean_utilization_pct']:.1f}% mean utilization), "
+            f"stranded {m['mean_stranded_pct']:.1f}%, "
+            f"fragmentation {m['mean_fragmentation_pct']:.1f}%, "
+            f"{m['preemptions']} preemptions, "
+            f"{m['prefill_chunks']} prefill chunks"
+        )
+    return (
+        f"kv cache: contiguous {m['n_slots']} x {m['max_len']} "
+        f"({kv['token_capacity']} tokens reserved worst-case), "
+        f"{m['mean_utilization_pct']:.1f}% mean slot utilization, "
+        f"stranded {m['mean_stranded_pct']:.1f}% of reserved, "
+        f"{m['prefill_chunks']} prefill chunks"
+    )
+
+
 def build_engine(args: argparse.Namespace) -> ServeEngine:
     """Engine construction shared with ``benchmarks/serve_load.py``."""
     cfg = get_config(args.arch)
@@ -67,6 +93,9 @@ def build_engine(args: argparse.Namespace) -> ServeEngine:
         plan_keys=plan_keys,
         max_tokens_per_step=args.step_budget,
         prefill_bucket=args.prefill_bucket,
+        prefill_chunk=args.prefill_chunk,
+        page_size=args.page_size,
+        n_pages=args.n_pages,
         seed=args.seed,
         quiet=False,
     )
@@ -110,6 +139,18 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
                     help="pad prompts to a multiple of this bucket so "
                          "prefill traces are shared across lengths "
                          "(attention-family archs only)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="split prompts longer than this into chunk-sized "
+                         "prefill pieces interleaved with decode steps "
+                         "(flattens the p99 TTFT spike; attention-family "
+                         "archs only)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="block-paged KV cache: tokens per page (default: "
+                         "contiguous max_len slots)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="KV pool size in pages (default: capacity-"
+                         "equivalent, slots * ceil(max_len/page_size); "
+                         "smaller over-commits — preemption reclaims)")
     ap.add_argument("--plan-dir", default=None,
                     help="PlanStore directory with verified offload plans")
     ap.add_argument("--plan-key", default=None,
@@ -169,6 +210,7 @@ def main() -> None:
         f"max {stats.max_active} concurrent, {stats.steps} engine steps, "
         f"decode median {engine.monitor.median_step()*1e3:.2f} ms/step"
     )
+    print(format_kv_metrics(engine))
     sample = completions[0]
     print(f"sample (request {sample.request_id}):",
           np.asarray(sample.tokens[:16]))

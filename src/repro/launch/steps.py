@@ -73,9 +73,28 @@ def abstract_state(cfg: ArchConfig, opt: AdamW | None = None):
     return params, opt_state
 
 
-def abstract_cache(cfg: ArchConfig, shape: ShapeConfig):
-    metas = lm.cache_metas_tree(cfg, shape.global_batch, shape.seq_len)
-    return pm.abstract_params(metas)
+def abstract_cache(
+    cfg: ArchConfig,
+    shape: ShapeConfig,
+    page_size: int | None = None,
+    n_pages: int | None = None,
+):
+    """Abstract KV cache for this cell — contiguous, or block-paged when
+    ``page_size``/``n_pages`` are given.  The paged tree includes the
+    ``pages`` page-table operand (``(B, max_pages)`` int32) the decode
+    program gathers through, so the dry-run lowers the exact paged
+    serving program with zero allocation."""
+    metas = lm.cache_metas_tree(
+        cfg, shape.global_batch, shape.seq_len,
+        page_size=page_size, n_pages=n_pages,
+    )
+    tree = pm.abstract_params(metas)
+    if page_size is not None:
+        max_pages = -(-shape.seq_len // page_size)
+        tree["pages"] = jax.ShapeDtypeStruct(
+            (shape.global_batch, max_pages), jnp.int32
+        )
+    return tree
 
 
 # -- steps ------------------------------------------------------------------------

@@ -84,6 +84,35 @@ def cache_metas(cfg: ArchConfig, batch: int, max_len: int) -> dict:
     }
 
 
+def cache_metas_paged(
+    cfg: ArchConfig, n_pages_total: int, page_size: int
+) -> dict:
+    """Block-paged pool layout: the contiguous layout with the batch axis
+    reinterpreted as a *shared page pool* (``n_pages_total`` includes the
+    null page) and the sequence axis shrunk to one page.  Slot identity
+    moves out of the storage entirely — it lives in the page table the
+    decode program gathers through — so pool axes carry no batch/sequence
+    sharding names (multi-device serving shards slots, not pages)."""
+    out = {}
+    for key, m in cache_metas(cfg, n_pages_total, page_size).items():
+        axes = tuple(
+            None if a in ("act_batch", "cache_seq") else a for a in m.axes
+        )
+        out[key] = ParamMeta(m.shape, axes, m.dtype, m.init, m.scale)
+    return out
+
+
+def cache_seq_axes(cfg: ArchConfig) -> dict:
+    """Leaf name -> sequence-axis position in the per-layer contiguous
+    cache leaf (batch leading).  The same position holds the within-page
+    axis in the paged pool layout — the engine's page-insert uses this to
+    split a prefilled slot cache into whole pages."""
+    return {
+        key: m.axes.index("cache_seq")
+        for key, m in cache_metas(cfg, 1, 1).items()
+    }
+
+
 # -- chunked full-sequence attention (the memory-safe XLA formulation) ---------
 #
 # Flash-attention forward AND backward in jnp, with *static* chunk loops:
@@ -277,10 +306,13 @@ _register_chunked()
 
 # -- decode attention over a cache ----------------------------------------------
 #
-# ``index`` is per-slot: shape (B,), the write position of the new token in
-# each batch row's cache.  Continuous-batching serving (``repro.serve``)
-# staggers requests across slots, so every row decodes at its own position;
-# the single-sequence case is just the vector with equal entries.
+# ``index`` is per-slot: shape (B,), the write position of the *first* new
+# token in each batch row's cache.  Continuous-batching serving
+# (``repro.serve``) staggers requests across slots, so every row decodes at
+# its own position; the single-sequence case is just the vector with equal
+# entries.  Decode is the S=1 case of the general cached-extension step
+# (S > 1 is chunked prefill: a budget-sized prompt chunk appended against
+# the cache, causal within the chunk).
 
 
 def _update_slot_rows(cache: jax.Array, update: jax.Array, index: jax.Array,
@@ -297,22 +329,99 @@ def _update_slot_rows(cache: jax.Array, update: jax.Array, index: jax.Array,
     )(cache, update, index)
 
 
+# -- page-table indirection (the paged KV pool) ---------------------------------
+#
+# Pool leaves share the contiguous leaf's rank: batch axis -> page axis
+# (``n_pages + 1``; the last page is the null page freed/prefilling slots
+# scatter into), sequence axis -> one page of ``page_size`` rows.
+# ``pages`` is the (B, max_pages) int32 page table; a slot's logical
+# position ``t`` lives in page ``pages[b, t // page_size]`` at row
+# ``t % page_size``.  Entries past a slot's allocation point at the null
+# page, so the gathered view is garbage there — always masked, because the
+# valid mask admits only ``t <= index``.
+
+
+def gather_kv_pages(
+    pool: jax.Array, pages: jax.Array, seq_axis: int
+) -> jax.Array:
+    """Gather a per-slot contiguous K/V view from the page pool.
+
+    ``pool`` (P_total, ..., page_size @ seq_axis, ...), ``pages``
+    (B, max_pages) -> (B, ..., max_pages * page_size @ seq_axis, ...).
+    """
+    g = pool[pages]  # (B, max_pages) + pool.shape[1:]
+    g = jnp.moveaxis(g, 1, seq_axis)  # page axis lands beside the page rows
+    shp = g.shape
+    return g.reshape(
+        shp[:seq_axis]
+        + (shp[seq_axis] * shp[seq_axis + 1],)
+        + shp[seq_axis + 2 :]
+    )
+
+
+def scatter_token_pages(
+    pool: jax.Array,
+    val: jax.Array,
+    pages: jax.Array,
+    index: jax.Array,
+    seq_axis: int,
+) -> jax.Array:
+    """Scatter each row's new token into its current page.
+
+    ``val`` is the token slice with the sequence axis squeezed out (GQA
+    (B, KH, D), MLA (B, r)); ``index`` (B,) is the logical write position.
+    Rows whose table entry is the null page (freed slots, slots still
+    prefilling) write into the sacrificial page.
+    """
+    ps = pool.shape[seq_axis]
+    pid = jnp.take_along_axis(
+        pages, (index[:, None] // ps).astype(jnp.int32), axis=1, mode="clip"
+    )[:, 0]
+    off = index % ps
+    idx = (pid,) + (slice(None),) * (seq_axis - 1) + (off,)
+    return pool.at[idx].set(val.astype(pool.dtype))
+
+
+def insert_pages(
+    pool: jax.Array, b1: jax.Array, page_ids: jax.Array, seq_axis: int
+) -> jax.Array:
+    """Scatter a prefilled batch-1 slot cache into the pool as whole pages.
+
+    ``pool`` (L, P_total, ..., page_size, ...), ``b1`` (L, 1, ..., S, ...)
+    with ``S == max_pages * page_size``; ``page_ids`` (max_pages,) is the
+    slot's page list, null-page entries absorbing the unallocated tail.
+    ``seq_axis`` positions are per-layer (batch leading), as from
+    :func:`cache_seq_axes`.
+    """
+    ps = pool.shape[seq_axis + 1]
+    x = jnp.squeeze(b1, axis=1)  # (L, ..., S, ...): seq back at seq_axis
+    shp = x.shape
+    n = shp[seq_axis] // ps
+    x = x.reshape(shp[:seq_axis] + (n, ps) + shp[seq_axis + 1 :])
+    x = jnp.moveaxis(x, seq_axis, 1)  # (L, max_pages, ..., ps, ...)
+    return pool.at[:, page_ids].set(x.astype(pool.dtype))
+
+
 def decode_attention_gqa(
-    q: jax.Array,  # (B, H, 1, D)
+    q: jax.Array,  # (B, H, S, D) — S=1 decode, S>1 chunked-prefill extend
     k_cache: jax.Array,  # (B, KH, Smax, D)
     v_cache: jax.Array,
-    index: jax.Array,  # (B,): each row's current position (new token slot)
+    index: jax.Array,  # (B,): each row's first new-token position
 ) -> jax.Array:
-    b, h, _, d = q.shape
+    b, h, s, d = q.shape
     _, kh, smax, _ = k_cache.shape
     g = h // kh
-    qg = q.reshape(b, kh, g, d).astype(jnp.float32) / (d ** 0.5)
-    s = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.float32))
-    valid = jnp.arange(smax)[None, None, None, :] <= index[:, None, None, None]
-    s = jnp.where(valid, s, _NEG)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
-    return o.reshape(b, h, 1, d).astype(q.dtype)
+    qg = q.reshape(b, kh, g, s, d).astype(jnp.float32) / (d ** 0.5)
+    sc = jnp.einsum("bkgqd,bktd->bkgqt", qg, k_cache.astype(jnp.float32))
+    qpos = index[:, None] + jnp.arange(s)  # (B, S)
+    valid = (
+        jnp.arange(smax)[None, None, None, None, :]
+        <= qpos[:, None, None, :, None]
+    )
+    sc = jnp.where(valid, sc, _NEG)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, s, d).astype(q.dtype)
 
 
 # -- the GQA mixer ----------------------------------------------------------------
@@ -326,6 +435,7 @@ def gqa_forward(
     cache: dict | None = None,
     index: jax.Array | None = None,
     mode: str = "train",
+    pages: jax.Array | None = None,
 ):
     b, s, d = x.shape
     cd = jnp.dtype(cfg.compute_dtype)
@@ -343,15 +453,31 @@ def gqa_forward(
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
 
-    if mode == "decode":
+    if mode in ("decode", "extend"):
         assert cache is not None and index is not None
-        k_cache = _update_slot_rows(
-            cache["k"], kt.astype(cache["k"].dtype), index, axis=2
-        )
-        v_cache = _update_slot_rows(
-            cache["v"], vt.astype(cache["v"].dtype), index, axis=2
-        )
-        o = decode_attention_gqa(qt, k_cache, v_cache, index)
+        if pages is not None:
+            if s != 1:
+                raise ValueError(
+                    "paged attention writes one token per step; chunked "
+                    "prefill extends the contiguous slot cache, not the pool"
+                )
+            k_cache = scatter_token_pages(
+                cache["k"], kt[:, :, 0, :], pages, index, seq_axis=2
+            )
+            v_cache = scatter_token_pages(
+                cache["v"], vt[:, :, 0, :], pages, index, seq_axis=2
+            )
+            k_view = gather_kv_pages(k_cache, pages, seq_axis=2)
+            v_view = gather_kv_pages(v_cache, pages, seq_axis=2)
+        else:
+            k_cache = _update_slot_rows(
+                cache["k"], kt.astype(cache["k"].dtype), index, axis=2
+            )
+            v_cache = _update_slot_rows(
+                cache["v"], vt.astype(cache["v"].dtype), index, axis=2
+            )
+            k_view, v_view = k_cache, v_cache
+        o = decode_attention_gqa(qt, k_view, v_view, index)
         new_cache = {"k": k_cache, "v": v_cache}
     else:
         o = blocks.call("attention", qt, kt, vt, causal=True)
@@ -382,6 +508,7 @@ def mla_forward(
     cache: dict | None = None,
     index: jax.Array | None = None,
     mode: str = "train",
+    pages: jax.Array | None = None,
 ):
     m = cfg.mla
     b, s, d = x.shape
@@ -400,36 +527,54 @@ def mla_forward(
     kr = jnp.einsum("bsd,dr->bsr", xc, p["w_kr"].astype(cd))
     kr = rope(kr[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,dr)
 
-    if mode == "decode":
+    if mode in ("decode", "extend"):
         assert cache is not None and index is not None
-        c_cache = _update_slot_rows(
-            cache["c"], c.astype(cache["c"].dtype), index, axis=1
-        )
-        kr_cache = _update_slot_rows(
-            cache["kr"], kr[:, :, 0, :].astype(cache["kr"].dtype), index, axis=1
-        )
+        if pages is not None:
+            if s != 1:
+                raise ValueError(
+                    "paged attention writes one token per step; chunked "
+                    "prefill extends the contiguous slot cache, not the pool"
+                )
+            c_cache = scatter_token_pages(
+                cache["c"], c[:, 0, :], pages, index, seq_axis=1
+            )
+            kr_cache = scatter_token_pages(
+                cache["kr"], kr[:, 0, 0, :], pages, index, seq_axis=1
+            )
+            c_view = gather_kv_pages(c_cache, pages, seq_axis=1)
+            kr_view = gather_kv_pages(kr_cache, pages, seq_axis=1)
+        else:
+            c_cache = _update_slot_rows(
+                cache["c"], c.astype(cache["c"].dtype), index, axis=1
+            )
+            kr_cache = _update_slot_rows(
+                cache["kr"], kr[:, :, 0, :].astype(cache["kr"].dtype), index,
+                axis=1,
+            )
+            c_view, kr_view = c_cache, kr_cache
         # absorbed decode: score = q_abs . c  +  qr . kr
         w_uk = p["w_uk"].astype(cd).reshape(m.kv_lora_rank, h, dn)
-        q_abs = jnp.einsum("bshn,rhn->bshr", qn, w_uk)  # (B,1,H,r)
+        q_abs = jnp.einsum("bshn,rhn->bshr", qn, w_uk)  # (B,S,H,r)
         scale = 1.0 / ((dn + dr) ** 0.5)
         s_nope = jnp.einsum(
             "bshr,btr->bhst", q_abs.astype(jnp.float32),
-            c_cache.astype(jnp.float32),
+            c_view.astype(jnp.float32),
         )
         s_rope = jnp.einsum(
             "bshr,btr->bhst", qr.astype(jnp.float32),
-            kr_cache.astype(jnp.float32),
+            kr_view.astype(jnp.float32),
         )
-        sc = (s_nope + s_rope) * scale  # (B,H,1,T)
-        smax = c_cache.shape[1]
+        sc = (s_nope + s_rope) * scale  # (B,H,S,T)
+        smax = c_view.shape[1]
+        qpos = index[:, None] + jnp.arange(s)  # (B, S)
         valid = (
             jnp.arange(smax)[None, None, None, :]
-            <= index[:, None, None, None]
+            <= qpos[:, None, :, None]
         )
         sc = jnp.where(valid, sc, _NEG)
         pattn = jax.nn.softmax(sc, axis=-1)
         ctx = jnp.einsum(
-            "bhst,btr->bshr", pattn, c_cache.astype(jnp.float32)
+            "bhst,btr->bshr", pattn, c_view.astype(jnp.float32)
         )  # weighted latent
         w_uv = p["w_uv"].astype(cd).reshape(m.kv_lora_rank, h, dv)
         o = jnp.einsum("bshr,rhv->bshv", ctx.astype(cd), w_uv)
@@ -471,7 +616,9 @@ def mla_forward(
     return out, new_cache
 
 
-def attention_forward(p, x, cfg, positions, cache=None, index=None, mode="train"):
+def attention_forward(
+    p, x, cfg, positions, cache=None, index=None, mode="train", pages=None
+):
     if cfg.mla is not None:
-        return mla_forward(p, x, cfg, positions, cache, index, mode)
-    return gqa_forward(p, x, cfg, positions, cache, index, mode)
+        return mla_forward(p, x, cfg, positions, cache, index, mode, pages)
+    return gqa_forward(p, x, cfg, positions, cache, index, mode, pages)

@@ -35,7 +35,12 @@ import repro.kernels  # noqa: F401  (registers function blocks)
 REMAT_POLICY = "none"
 from repro.configs.base import ArchConfig
 from repro.models import params as pm
-from repro.models.attention import attention_forward, attn_metas, cache_metas
+from repro.models.attention import (
+    attention_forward,
+    attn_metas,
+    cache_metas,
+    cache_metas_paged,
+)
 from repro.models.layers import (
     cross_entropy,
     embed_lookup,
@@ -130,15 +135,38 @@ def build_metas(cfg: ArchConfig) -> dict:
     return metas
 
 
-def cache_metas_tree(cfg: ArchConfig, batch: int, max_len: int) -> dict:
+def cache_metas_tree(
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    *,
+    page_size: int | None = None,
+    n_pages: int | None = None,
+) -> dict:
+    """Cache layout: contiguous (default) or block-paged.
+
+    Contiguous: every attention group leaf reserves ``batch x max_len``
+    rows.  Paged (``page_size`` + ``n_pages`` given): attention leaves
+    become a shared pool of ``n_pages`` fixed-size pages (+ one null page
+    at index ``n_pages``), addressed through the ``(batch, max_pages)``
+    page table the serving engine passes alongside the cache; SSM state
+    leaves stay per-slot (a recurrent state has no sequence axis to page).
+    """
+    paged = page_size is not None
+    if paged and n_pages is None:
+        raise ValueError("paged cache needs both page_size and n_pages")
     caches: dict = {}
     for g in groups_of(cfg):
         if g.kind == "m":
             caches[g.key] = _stack(ssm_state_metas(cfg, batch), g.count)
+        elif paged:
+            caches[g.key] = _stack(
+                cache_metas_paged(cfg, n_pages + 1, page_size), g.count
+            )
         else:
             caches[g.key] = _stack(cache_metas(cfg, batch, max_len), g.count)
-    # per-slot write position: continuous-batching serving staggers
-    # requests across batch rows, so each row carries its own length
+    # per-slot lengths: continuous-batching serving staggers requests
+    # across batch rows, so each row carries its own write position
     caches["index"] = ParamMeta((batch,), ("act_batch",), "int32", init="zeros")
     return caches
 
@@ -147,8 +175,20 @@ def init_params(cfg: ArchConfig, seed: int = 0) -> Any:
     return pm.init_params(build_metas(cfg), seed)
 
 
-def init_cache(cfg: ArchConfig, batch: int, max_len: int) -> Any:
-    return pm.init_params(cache_metas_tree(cfg, batch, max_len), 0)
+def init_cache(
+    cfg: ArchConfig,
+    batch: int,
+    max_len: int,
+    *,
+    page_size: int | None = None,
+    n_pages: int | None = None,
+) -> Any:
+    return pm.init_params(
+        cache_metas_tree(
+            cfg, batch, max_len, page_size=page_size, n_pages=n_pages
+        ),
+        0,
+    )
 
 
 # -- block application -------------------------------------------------------------
@@ -175,7 +215,7 @@ def _opt_barrier_jvp(primals, tangents):
 
 def _apply_attn_block(
     lp: dict, x: jax.Array, cfg: ArchConfig, positions, cache, index, mode,
-    kind: str,
+    kind: str, pages=None,
 ):
     cd = jnp.dtype(cfg.compute_dtype)
     # Sequence-parallel <-> tensor-parallel transitions are made explicit
@@ -191,7 +231,7 @@ def _apply_attn_block(
         rmsnorm(lp["ln1"], x, cfg.norm_eps).astype(cd)
     )
     attn_out, new_cache = attention_forward(
-        lp["attn"], h_in, cfg, positions, cache, index, mode
+        lp["attn"], h_in, cfg, positions, cache, index, mode, pages
     )
     x = x + attn_out.astype(x.dtype)
     ff_in = _opt_barrier(
@@ -208,6 +248,12 @@ def _apply_attn_block(
 
 
 def _apply_mamba_block(lp, x, cfg, cache, mode):
+    if mode == "extend":
+        raise ValueError(
+            "chunked prefill (extend mode) is unsupported for SSM blocks: "
+            "resuming the scan needs the conv window stitched across chunk "
+            "boundaries"
+        )
     cd = jnp.dtype(cfg.compute_dtype)
     h_in = _opt_barrier(
         rmsnorm(lp["ln"], x, cfg.norm_eps).astype(cd)
@@ -219,7 +265,8 @@ def _apply_mamba_block(lp, x, cfg, cache, mode):
 
 
 def _apply_group(
-    gparams, g: Group, x, cfg, positions, gcache, index, mode, shared_params
+    gparams, g: Group, x, cfg, positions, gcache, index, mode, shared_params,
+    pages=None,
 ):
     """Scan a homogeneous group of layers; returns (x, aux_sum, new_gcache)."""
     use_cache = gcache is not None
@@ -231,7 +278,7 @@ def _apply_group(
             x, a, nc = _apply_mamba_block(p, x, cfg, lcache, mode)
         else:
             x, a, nc = _apply_attn_block(
-                p, x, cfg, positions, lcache, index, mode, g.kind
+                p, x, cfg, positions, lcache, index, mode, g.kind, pages
             )
         return x, aux + a, nc
 
@@ -298,12 +345,18 @@ def backbone(
     b, s = x.shape[0], x.shape[1]
     x = constrain(x, "act_batch", "act_seq", None)
 
-    if mode == "decode":
+    pages = None
+    if mode in ("decode", "extend"):
         index = cache["index"]
-        if index.ndim == 0:  # legacy scalar-index caches
-            index = jnp.broadcast_to(index, (b,))
+        if index.ndim != 1:
+            raise ValueError(
+                "cache['index'] must be per-slot (B,) write positions; the "
+                "scalar-index broadcast fallback was removed — rebuild the "
+                "cache with init_cache()"
+            )
         index = index.astype(jnp.int32)
-        positions = jnp.broadcast_to(index[:, None], (b, s)).astype(jnp.int32)
+        pages = cache.get("pages")  # (B, max_pages) page table, paged only
+        positions = index[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
     else:
         index = None
         positions = jnp.broadcast_to(
@@ -317,7 +370,7 @@ def backbone(
         gparams = None if g.kind == "s" else params["blocks"][g.key]
         gcache = cache[g.key] if cache is not None else None
         x, aux, nc = _apply_group(
-            gparams, g, x, cfg, positions, gcache, index, mode, shared
+            gparams, g, x, cfg, positions, gcache, index, mode, shared, pages
         )
         aux_total = aux_total + aux
         if cache is not None:
@@ -342,8 +395,8 @@ def forward(
     s = x.shape[1]
     logits = head(params, x, cfg)
     if cache is not None:
-        if mode == "decode":
-            new_cache["index"] = cache["index"] + 1
+        if mode in ("decode", "extend"):
+            new_cache["index"] = cache["index"] + s
         else:  # prefill: every row's cache now holds s tokens
             new_cache["index"] = jnp.full(
                 (batch["tokens" if "tokens" in batch else "embeds"].shape[0],),

@@ -28,6 +28,11 @@ from repro.serve.engine import (  # noqa: F401
     PhaseTelemetry,
     ServeEngine,
 )
+from repro.serve.kv import (  # noqa: F401
+    PagePool,
+    PageTable,
+    PoolExhausted,
+)
 from repro.serve.request import (  # noqa: F401
     Completion,
     Request,

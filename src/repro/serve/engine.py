@@ -16,6 +16,23 @@ operation" end state:
   prefilled straight into it while the other slots keep decoding.  A
   token budget (:class:`repro.serve.scheduler.Scheduler`) bounds how much
   prefill work any single step may inject ahead of the in-flight decodes.
+* **Block-paged KV cache** — with ``page_size`` set, slot storage moves
+  into a shared :class:`repro.serve.kv.PagePool`: K/V lives in fixed-size
+  pages, each slot holds a page list (:class:`repro.serve.kv.PageTable`),
+  and the decode program gathers K/V *through the page table*, which it
+  receives as a traced ``(n_slots, max_pages)`` operand — admissions,
+  evictions and page appends never retrace.  Capacity becomes
+  ``n_pages x page_size`` shared tokens instead of a per-request
+  ``max_len`` reservation; under page pressure the youngest request is
+  preempted (pages reclaimed, request requeued, continuation
+  token-identical).  ``page_size=max_len`` is the degenerate
+  one-page-per-slot case — the contiguous layout as a special case of the
+  paged one.
+* **Chunked prefill** — ``prefill_chunk`` splits prompts longer than one
+  chunk into chunk-sized pieces run on consecutive engine steps,
+  interleaved with the in-flight decodes (pages allocated per chunk), so
+  one long prompt no longer spikes every other request's inter-token
+  latency or TTFT.
 * **Plan-aware phase dispatch** — prefill and decode are *different
   programs* with different winning offload patterns, so each phase is
   traced under its own committed plan (``zoo:<arch>:prefill`` /
@@ -25,9 +42,9 @@ operation" end state:
   programs end in :func:`repro.serve.sampler.sample_tokens`, so the
   per-step host transfer is (B,) token ids, not (B, V) logits.
 * **Telemetry** — every phase call runs under ``metering.meter_window``
-  and aggregates into per-phase :class:`PhaseTelemetry` (seconds, joules,
-  measured/estimated provenance); the decode loop feeds a
-  ``runtime.StepMonitor`` for throughput and straggler stats.
+  and aggregates into per-phase :class:`PhaseTelemetry`; the decode loop
+  feeds a ``runtime.StepMonitor``; :meth:`ServeEngine.metrics` reports
+  KV-pool utilization, stranded capacity and page fragmentation.
 """
 
 from __future__ import annotations
@@ -47,8 +64,10 @@ from repro.core import blocks as blocks_mod
 from repro.metering import meter_window, resolve_meter
 from repro.metering.meters import WindowTelemetry
 from repro.models import lm
+from repro.models.attention import cache_seq_axes, insert_pages
 from repro.offload import stored_binding
 from repro.runtime.monitor import StepMonitor
+from repro.serve.kv import PagePool, PageTable, PoolExhausted, pages_for
 from repro.serve.request import Completion, Request, RequestState, Token
 from repro.serve.sampler import Sampler, sample_tokens
 from repro.serve.scheduler import Scheduler
@@ -110,6 +129,19 @@ class EngineStats:
     tokens_generated: int
     slot_reuses: int
     max_active: int
+    preemptions: int = 0
+    prefill_chunks: int = 0
+
+
+@dataclasses.dataclass
+class _PrefillProgress:
+    """One request mid-chunked-prefill: the per-request working cache and
+    how much of the context has been extended into it."""
+
+    state: RequestState
+    context: list[int]
+    cache: Any
+    pos: int = 0
 
 
 class ServeEngine:
@@ -123,6 +155,19 @@ class ServeEngine:
     explicit keys per phase or one key for both.  ``sampler`` is the
     default :class:`Sampler` for requests that don't carry their own.
     ``meter`` (name or ``PowerMeter``) adds per-phase energy telemetry.
+
+    ``page_size`` switches the KV cache to the block-paged layout;
+    ``n_pages`` sizes the shared pool (default: capacity-equivalent to
+    the contiguous layout, ``n_slots * ceil(max_len / page_size)``).
+    Admission then gates on free pages, eviction returns pages, and a
+    smaller pool *over-commits*: more slots than the pool could hold at
+    worst case, safe because the youngest request is preempted (and later
+    resumed token-identically) if the pool ever actually fills.
+
+    ``prefill_chunk`` enables chunked prefill (attention-family archs
+    only — a recurrent SSM scan cannot resume across chunk boundaries):
+    prompts longer than the chunk extend the cache chunk-by-chunk on
+    consecutive steps, interleaved with running decodes.
 
     ``prefill_bucket`` pads prompts up to a multiple of the bucket so
     prefill traces are shared across prompt lengths — attention-family
@@ -144,6 +189,9 @@ class ServeEngine:
         plan_keys: "dict[str, str | None] | str | None" = None,
         max_tokens_per_step: int | None = None,
         prefill_bucket: int | None = None,
+        prefill_chunk: int | None = None,
+        page_size: int | None = None,
+        n_pages: int | None = None,
         monitor: StepMonitor | None = None,
         seed: int = 0,
         quiet: bool = True,
@@ -161,6 +209,16 @@ class ServeEngine:
                 f"state — unsupported for '{cfg.name}' "
                 f"(pattern {cfg.pattern()!r})"
             )
+        if prefill_chunk is not None and "m" in cfg.pattern():
+            raise ValueError(
+                "prefill_chunk resumes the sequence mid-prompt, which an "
+                f"SSM scan cannot do — unsupported for '{cfg.name}' "
+                f"(pattern {cfg.pattern()!r})"
+            )
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if n_pages is not None and page_size is None:
+            raise ValueError("n_pages given without page_size")
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
@@ -169,17 +227,44 @@ class ServeEngine:
         self.seed = seed
         self.quiet = quiet
         self.prefill_bucket = prefill_bucket
+        self.prefill_chunk = prefill_chunk
         self.monitor = monitor or StepMonitor()
+
+        # -- KV memory subsystem ------------------------------------------
+        self.paged = page_size is not None
+        if self.paged:
+            if page_size < 1:
+                raise ValueError("page_size must be >= 1")
+            max_pages = pages_for(max_len, page_size)
+            if n_pages is None:
+                # capacity-equivalent default: the paged layout holds the
+                # same tokens as the contiguous one, minus the stranding
+                n_pages = n_slots * max_pages
+            self.kv: PageTable | None = PageTable(
+                n_slots, max_pages, PagePool(n_pages, page_size)
+            )
+            self._slot_len = max_pages * page_size
+            self._seq_axes = cache_seq_axes(cfg)
+            self._group_kinds = {g.key: g.kind for g in lm.groups_of(cfg)}
+            self.cache = lm.init_cache(
+                cfg, n_slots, max_len, page_size=page_size, n_pages=n_pages
+            )
+        else:
+            self.kv = None
+            self._slot_len = max_len
+            self.cache = lm.init_cache(cfg, n_slots, max_len)
+
         self.scheduler = Scheduler(
             n_slots,
             max_tokens_per_step,
-            prompt_cost=lambda n: self._padded_len(n),
+            prompt_cost=self._admission_cost,
+            kv=self.kv,
+            admit_tokens=self._admission_tokens,
         )
 
         self.params = (
             params if params is not None else lm.init_params(cfg, seed=seed)
         )
-        self.cache = lm.init_cache(cfg, n_slots, max_len)
 
         # -- plan-aware phase dispatch ------------------------------------
         # keys the caller named explicitly must fail loudly when they
@@ -220,7 +305,14 @@ class ServeEngine:
         # step / admission would copy the full multi-layer KV cache
         self._prefill_fn = jax.jit(self._build_prefill())
         self._decode_fn = jax.jit(self._build_decode(), donate_argnums=(2,))
-        self._insert_fn = jax.jit(self._insert_slot, donate_argnums=(0,))
+        self._insert_fn = jax.jit(
+            self._insert_slot_paged if self.paged else self._insert_slot,
+            donate_argnums=(0,),
+        )
+        self._extend_fn = jax.jit(self._build_extend(), donate_argnums=(2,))
+        self._extend_sample_fn = jax.jit(
+            self._build_extend_sample(), donate_argnums=(2,)
+        )
 
         # host-side per-slot state mirrors (pushed each decode step)
         self._last_tok = np.zeros((n_slots, 1), np.int32)
@@ -228,6 +320,16 @@ class ServeEngine:
         self._gen_counts = np.zeros((n_slots,), np.int32)
         self._temps = np.zeros((n_slots,), np.float32)
         self._topks = np.zeros((n_slots,), np.int32)
+        self._lengths = np.zeros((n_slots,), np.int64)  # resident tokens
+
+        #: slots mid-chunked-prefill (slot -> _PrefillProgress); these
+        #: occupy a slot + pages but are excluded from decode until the
+        #: final chunk samples their first token
+        self._prefilling: dict[int, _PrefillProgress] = {}
+        # device-resident page-table operand, re-uploaded only when the
+        # table actually changed (steady-state decode recomposes nothing)
+        self._pages_op: jax.Array | None = None
+        self._pages_version = -1
 
         self.telemetry = {p: PhaseTelemetry(p) for p in PHASES}
         self.completions: dict[int, Completion] = {}
@@ -236,6 +338,35 @@ class ServeEngine:
         self._submitted = 0
         self._steps = 0
         self._max_active = 0
+        self._chunk_calls = 0
+        # per-step KV-health samples (while requests were resident):
+        # (utilization_pct, stranded_pct, fragmentation_pct) running sums
+        self._kv_samples = 0
+        self._kv_sums = [0.0, 0.0, 0.0]
+
+    # -- admission policy ------------------------------------------------------
+    @staticmethod
+    def _ctx_len(state: RequestState) -> int:
+        """Tokens of context an admission must (re-)prefill: the prompt,
+        plus any tokens already generated before a preemption."""
+        return len(state.request.prompt) + len(state.tokens)
+
+    def _is_chunked(self, ctx: int) -> bool:
+        return self.prefill_chunk is not None and ctx > self.prefill_chunk
+
+    def _admission_cost(self, state: RequestState) -> int:
+        """Budget tokens the admission's first program call runs."""
+        ctx = self._ctx_len(state)
+        if self._is_chunked(ctx):
+            return self.prefill_chunk
+        return self._padded_len(ctx)
+
+    def _admission_tokens(self, state: RequestState) -> int:
+        """Tokens the admission must hold pages for right now."""
+        ctx = self._ctx_len(state)
+        if self._is_chunked(ctx):
+            return min(ctx, self.prefill_chunk)
+        return ctx
 
     # -- plan resolution ------------------------------------------------------
     def _resolve_plan_keys(
@@ -272,15 +403,18 @@ class ServeEngine:
     # -- jitted programs -------------------------------------------------------
     def _build_prefill(self):
         cfg = self.cfg
-        cache_metas = lm.cache_metas_tree(cfg, 1, self.max_len)
+        cache_metas = lm.cache_metas_tree(cfg, 1, self._slot_len)
 
-        def prefill_fn(params, tokens, last_idx, seed, temp, topk):
-            """tokens (1, Lp) -> (first sampled token (1,), filled b1 cache).
+        def prefill_fn(params, tokens, last_idx, seed, gen_step, temp, topk):
+            """tokens (1, Lp) -> (sampled token (1,), filled b1 cache).
 
             The zero cache is built *inside* the program (XLA fuses it to
             nothing), only the *last real position*'s hidden state reaches
             the head — the (1, Lp, V) logits tensor is never materialised
             — and padded bucket positions past ``last_idx`` are ignored.
+            ``gen_step`` is the sampled token's generation index: 0 for a
+            fresh request, ``len(tokens)`` when a preempted request
+            resumes (the (seed, index) PRNG key must keep its place).
             """
             from repro.models import params as pm
 
@@ -293,7 +427,7 @@ class ServeEngine:
             tok = sample_tokens(
                 logits,
                 seed[None],
-                jnp.zeros((1,), jnp.int32),
+                gen_step[None],
                 temp[None],
                 topk[None],
             )
@@ -304,10 +438,16 @@ class ServeEngine:
 
     def _build_decode(self):
         cfg = self.cfg
+        paged = self.paged
 
-        def decode_fn(params, tokens, cache, seeds, steps, temps, topks):
-            """One fused (logits -> token) step for the whole slot batch."""
+        def decode_fn(params, tokens, cache, pages, seeds, steps, temps, topks):
+            """One fused (logits -> token) step for the whole slot batch.
+            ``pages`` is the page-table operand (paged mode; unused
+            otherwise) — recomposing the batch never retraces."""
+            if paged:
+                cache = dict(cache, pages=pages)
             logits, new_cache = lm.decode_step(params, tokens, cfg, cache)
+            new_cache.pop("pages", None)
             tok = sample_tokens(
                 logits[:, 0, : cfg.vocab_size], seeds, steps, temps, topks
             )
@@ -315,10 +455,46 @@ class ServeEngine:
 
         return decode_fn
 
+    def _build_extend(self):
+        cfg = self.cfg
+
+        def extend_fn(params, tokens, cache):
+            """One non-final prefill chunk: extend the per-request cache
+            by ``tokens`` (1, C), no sampling, no head matmul."""
+            _, _, new_cache = lm.backbone(
+                params, {"tokens": tokens}, cfg, "extend", cache
+            )
+            new_cache["index"] = cache["index"] + tokens.shape[1]
+            return new_cache
+
+        return extend_fn
+
+    def _build_extend_sample(self):
+        cfg = self.cfg
+
+        def extend_sample_fn(
+            params, tokens, cache, last_off, seed, gen_step, temp, topk
+        ):
+            """The final prefill chunk: extend, project only the last real
+            position and sample the request's first token."""
+            x, _, new_cache = lm.backbone(
+                params, {"tokens": tokens}, cfg, "extend", cache
+            )
+            x_last = jax.lax.dynamic_slice_in_dim(x, last_off, 1, axis=1)
+            logits = lm.head(params, x_last, cfg)[:, 0, : cfg.vocab_size]
+            tok = sample_tokens(
+                logits, seed[None], gen_step[None], temp[None], topk[None]
+            )
+            new_cache["index"] = cache["index"] + last_off + 1
+            return tok, new_cache
+
+        return extend_sample_fn
+
     @staticmethod
-    def _insert_slot(cache, b1_cache, slot):
+    def _insert_slot(cache, b1_cache, slot, page_ids):
         """Write a batch-1 prefilled cache into slot ``slot`` of the engine
-        cache.  Group leaves are (layers, B, ...); ``index`` is (B,)."""
+        cache.  Group leaves are (layers, B, ...); ``index`` is (B,).
+        ``page_ids`` is unused (contiguous layout)."""
         out = {}
         for key, value in cache.items():
             if key == "index":
@@ -331,6 +507,33 @@ class ServeEngine:
                 )
         return out
 
+    def _insert_slot_paged(self, cache, b1_cache, slot, page_ids):
+        """Scatter a batch-1 prefilled cache into the page pool as whole
+        pages (``page_ids`` is the slot's (max_pages,) page list; entries
+        past the allocation absorb into the null page).  SSM state groups
+        have no sequence axis — they stay slot-indexed."""
+        out = {}
+        for key, value in cache.items():
+            if key == "index":
+                out[key] = value.at[slot].set(b1_cache[key][0])
+            elif self._group_kinds[key] == "m":
+                out[key] = jax.tree.map(
+                    lambda dst, src: dst.at[:, slot].set(src[:, 0]),
+                    value,
+                    b1_cache[key],
+                )
+            else:
+                out[key] = {
+                    leaf: insert_pages(
+                        value[leaf],
+                        b1_cache[key][leaf],
+                        page_ids,
+                        self._seq_axes[leaf],
+                    )
+                    for leaf in value
+                }
+        return out
+
     # -- public API ------------------------------------------------------------
     def submit(self, request: Request) -> int:
         """Queue a request; returns its request id.  Admission happens on a
@@ -341,6 +544,15 @@ class ServeEngine:
                 f"request needs {total} cache positions "
                 f"(prompt {len(request.prompt)} + {request.max_new_tokens} "
                 f"new) but slots hold max_len={self.max_len}"
+            )
+        if self.kv is not None and (
+            self.kv.pages_needed(total) > self.kv.pool.n_pages
+        ):
+            raise ValueError(
+                f"request needs {self.kv.pages_needed(total)} pages "
+                f"(prompt {len(request.prompt)} + {request.max_new_tokens} "
+                f"new at page_size={self.kv.pool.page_size}) but the pool "
+                f"holds {self.kv.pool.n_pages} — it could never be resident"
             )
         request_id = self._next_id
         self._next_id += 1
@@ -362,22 +574,35 @@ class ServeEngine:
         return request_id
 
     def step(self) -> list[Token | Completion]:
-        """One scheduling round: admissions (a prefill each), then one fused
-        decode step over every active slot.  Returns the streamed events —
+        """One scheduling round: in-flight prefill chunks, admissions
+        (a prefill — or a first chunk — each), then one fused decode step
+        over every decodable slot.  Returns the streamed events —
         ``Token`` per generated token, ``Completion`` per finished request
         — in generation order."""
         if not self.scheduler.has_work:
             return []
         self._steps += 1
         events: list[Token | Completion] = []
-        admitted = self.scheduler.admissions()
+
+        decoding = sum(
+            1 for slot in self.scheduler.active if slot not in self._prefilling
+        )
+        planned, reserved = self._plan_chunks(decoding)
+        spent = decoding + sum(run for _, run in planned) + reserved
+        for slot, run in planned:
+            self._run_chunk(slot, run, events)
+
+        admitted = self.scheduler.admissions(spent=spent)
         # concurrency peaks right after admission, before same-step
         # finishes release their slots — sample it here, not at step end
         self._max_active = max(self._max_active, len(self.scheduler.active))
         for state in admitted:
             events.extend(self._admit(state))
-        if self.scheduler.active:
+        if any(
+            slot not in self._prefilling for slot in self.scheduler.active
+        ):
             events.extend(self._decode_active())
+        self._sample_kv_health()
         return events
 
     def run_until_idle(self, max_steps: int | None = None) -> list[Completion]:
@@ -421,11 +646,17 @@ class ServeEngine:
             on_straggler=self.monitor.on_straggler,
         )
         self.scheduler.admitted_per_slot.clear()
+        self.scheduler.preemptions = 0
+        if self.kv is not None:
+            self.kv.pool.peak_used = self.kv.pool.used_pages
         self.completions.clear()
         self._finished.clear()
         self._submitted = 0
         self._steps = 0
         self._max_active = 0
+        self._chunk_calls = 0
+        self._kv_samples = 0
+        self._kv_sums = [0.0, 0.0, 0.0]
 
     @property
     def stats(self) -> EngineStats:
@@ -442,7 +673,76 @@ class ServeEngine:
             ),
             slot_reuses=self.scheduler.slot_reuses,
             max_active=self._max_active,
+            preemptions=self.scheduler.preemptions,
+            prefill_chunks=self._chunk_calls,
         )
+
+    def _kv_snapshot(self) -> tuple[float, float, float]:
+        """(utilization %, stranded %, fragmentation %) right now."""
+        if self.kv is not None:
+            pool = self.kv.pool
+            return (
+                100.0 * pool.used_pages / pool.n_pages,
+                self.kv.stranded_pct,
+                self.kv.fragmentation_pct,
+            )
+        active = len(self.scheduler.active)
+        resident = int(
+            sum(self._lengths[slot] for slot in self.scheduler.active)
+        )
+        reserved = active * self.max_len
+        return (
+            100.0 * reserved / (self.n_slots * self.max_len),
+            100.0 * (reserved - resident) / reserved if reserved else 0.0,
+            0.0,
+        )
+
+    def _sample_kv_health(self) -> None:
+        if not self.scheduler.active:
+            return
+        util, stranded, frag = self._kv_snapshot()
+        self._kv_samples += 1
+        self._kv_sums[0] += util
+        self._kv_sums[1] += stranded
+        self._kv_sums[2] += frag
+
+    def metrics(self) -> dict:
+        """KV memory health: pool utilization, stranded capacity and page
+        fragmentation (paged), or the contiguous equivalents — the numbers
+        that justify (or size) the page pool.  The ``mean_*`` keys average
+        one sample per engine step taken while requests were resident, so
+        they describe the *served* traffic, not the idle end state."""
+        active = len(self.scheduler.active)
+        resident = int(
+            sum(self._lengths[slot] for slot in self.scheduler.active)
+        )
+        n = max(self._kv_samples, 1)
+        out: dict = {
+            "mode": "paged" if self.paged else "contiguous",
+            "n_slots": self.n_slots,
+            "max_len": self.max_len,
+            "active": active,
+            "waiting": len(self.scheduler.waiting),
+            "preemptions": self.scheduler.preemptions,
+            "prefill_chunks": self._chunk_calls,
+            "mean_utilization_pct": self._kv_sums[0] / n,
+            "mean_stranded_pct": self._kv_sums[1] / n,
+            "mean_fragmentation_pct": self._kv_sums[2] / n,
+        }
+        if self.kv is not None:
+            out["kv"] = self.kv.stats()
+        else:
+            # a contiguous slot strands its whole unused tail — the
+            # number the page pool exists to reclaim
+            util, stranded, _ = self._kv_snapshot()
+            out["kv"] = {
+                "token_capacity": self.n_slots * self.max_len,
+                "resident_tokens": resident,
+                "reserved_tokens": active * self.max_len,
+                "utilization_pct": util,
+                "stranded_pct": stranded,
+            }
+        return out
 
     # -- phase execution -------------------------------------------------------
     def _padded_len(self, length: int) -> int:
@@ -451,56 +751,236 @@ class ServeEngine:
             length = min(-(-length // bucket) * bucket, self.max_len)
         return length
 
-    def _padded_prompt(self, prompt: Sequence[int]) -> np.ndarray:
-        out = np.zeros((1, self._padded_len(len(prompt))), np.int32)
-        out[0, : len(prompt)] = prompt
+    def _padded_prompt(self, context: Sequence[int]) -> np.ndarray:
+        out = np.zeros((1, self._padded_len(len(context))), np.int32)
+        out[0, : len(context)] = context
         return out
 
     def _request_knobs(self, state: RequestState) -> tuple[float, int]:
         return (state.request.sampling or self.sampler).knobs
 
+    def _slot_page_row(self, slot: int) -> jax.Array:
+        """The slot's (max_pages,) page-id operand for the insert program
+        (null-page filled past the allocation)."""
+        assert self.kv is not None
+        return jnp.asarray(self.kv.array()[slot])
+
+    def _preempt_for_pages(self, needy_slot: int) -> bool:
+        """Reclaim pages by preempting the youngest other request —
+        decoding victims first, then mid-prefill ones, finally the needy
+        slot itself (requeue beats deadlock).  Returns False when there is
+        nothing left to preempt."""
+        decoding = [
+            slot
+            for slot in self.scheduler.active
+            if slot not in self._prefilling and slot != needy_slot
+        ]
+        prefilling = [
+            slot for slot in self._prefilling if slot != needy_slot
+        ]
+        pool = decoding or prefilling or (
+            [needy_slot] if needy_slot in self.scheduler.active else []
+        )
+        if not pool:
+            return False
+        victim = max(pool, key=lambda s: self.scheduler.active[s].admit_seq)
+        self._prefilling.pop(victim, None)
+        self.scheduler.preempt(victim)
+        self._gen_counts[victim] = 0
+        self._lengths[victim] = 0
+        return True
+
+    def _ensure_pages(self, slot: int, n_tokens: int) -> None:
+        """Grow the slot to ``n_tokens`` of page capacity, preempting under
+        pool pressure.  Raises only when preemption cannot free enough —
+        impossible for requests submit() admitted (each fits the pool
+        alone)."""
+        if self.kv is None:
+            return
+        while True:
+            try:
+                self.kv.ensure(slot, n_tokens)
+                return
+            except PoolExhausted:
+                if not self._preempt_for_pages(slot):
+                    raise
+                if slot not in self.scheduler.active:
+                    return  # the needy slot preempted itself: it no longer
+                    # holds pages, and allocating onto a freed slot would
+                    # leak them (callers re-check liveness)
+
+    # -- chunked prefill -------------------------------------------------------
+    def _plan_chunks(self, decoding: int) -> tuple[list[tuple[int, int]], int]:
+        """Pick which mid-prefill slots run a chunk this step, and how many
+        tokens each: budget-capped, but guaranteed progress when nothing
+        else runs this step.  Returns ``(planned, reserved)`` — skipped
+        chunks *reserve* their budget tokens so this step's admissions
+        cannot refill the budget and starve an in-flight prefill forever."""
+        budget = self.scheduler.max_tokens_per_step
+        planned: list[tuple[int, int]] = []
+        reserved = 0
+        spent = decoding
+        for slot in sorted(self._prefilling):
+            prog = self._prefilling[slot]
+            run = min(self.prefill_chunk, len(prog.context) - prog.pos)
+            if budget is not None and spent + reserved + run > budget:
+                if spent or planned:
+                    reserved += run  # held against new admissions
+                    continue  # decode / earlier chunks run first
+                # nothing else runs this step: progress beats the budget
+            planned.append((slot, run))
+            spent += run
+        return planned, reserved
+
+    def _run_chunk(
+        self, slot: int, run: int, events: list[Token | Completion]
+    ) -> None:
+        """Extend one request's working cache by one chunk; the final chunk
+        samples the first token and commits the cache into the slot."""
+        if slot not in self._prefilling:
+            return  # preempted by an earlier slot's page-ensure this step
+        prog = self._prefilling[slot]
+        state = prog.state
+        final = prog.pos + run >= len(prog.context)
+        # pages for this chunk (reserved now, written at the final insert)
+        self._ensure_pages(slot, prog.pos + run)
+        if slot not in self._prefilling:
+            return  # self-preempted under extreme pool pressure
+        # the final chunk runs at its exact width: padding it to the chunk
+        # would write zero-token K/V past the context end — and past the
+        # cache end for a near-max_len prompt, where dynamic_update_slice
+        # clamps the write *backward* over correct prompt rows.  One trace
+        # per distinct tail length, same policy as the prefill program.
+        tokens = np.asarray(
+            [prog.context[prog.pos : prog.pos + run]], np.int32
+        )
+        self._chunk_calls += 1
+        with self._phase("prefill"), meter_window(self.meter) as tele:
+            if final:
+                temp, topk = self._request_knobs(state)
+                tok, b1_cache = self._extend_sample_fn(
+                    self.params,
+                    jnp.asarray(tokens),
+                    prog.cache,
+                    jnp.asarray(run - 1, jnp.int32),
+                    jnp.asarray(state.seed, jnp.int32),
+                    jnp.asarray(len(state.tokens), jnp.int32),
+                    jnp.asarray(temp, jnp.float32),
+                    jnp.asarray(topk, jnp.int32),
+                )
+                self._commit_slot(state, tok, b1_cache, events)
+                del self._prefilling[slot]
+            else:
+                prog.cache = self._extend_fn(
+                    self.params, jnp.asarray(tokens), prog.cache
+                )
+                prog.pos += run
+        self.telemetry["prefill"].add(tele, run)
+
+    def _fresh_b1_cache(self) -> Any:
+        return lm.init_cache(self.cfg, 1, self._slot_len)
+
+    # -- admission / decode ----------------------------------------------------
     def _admit(self, state: RequestState) -> list[Token | Completion]:
-        request = state.request
+        context = list(state.request.prompt) + list(state.tokens)
+        if self._is_chunked(len(context)):
+            self._prefilling[state.slot] = _PrefillProgress(
+                state, context, self._fresh_b1_cache()
+            )
+            events: list[Token | Completion] = []
+            self._run_chunk(state.slot, self.prefill_chunk, events)
+            return events
+
         temp, topk = self._request_knobs(state)
-        tokens = self._padded_prompt(request.prompt)
+        tokens = self._padded_prompt(context)
         with self._phase("prefill"), meter_window(self.meter) as tele:
             tok, b1_cache = self._prefill_fn(
                 self.params,
                 jnp.asarray(tokens),
-                jnp.asarray(len(request.prompt) - 1, jnp.int32),
+                jnp.asarray(len(context) - 1, jnp.int32),
                 jnp.asarray(state.seed, jnp.int32),
+                jnp.asarray(len(state.tokens), jnp.int32),
                 jnp.asarray(temp, jnp.float32),
                 jnp.asarray(topk, jnp.int32),
             )
-            self.cache = self._insert_fn(
-                self.cache, b1_cache, jnp.asarray(state.slot, jnp.int32)
-            )
-            first = int(np.asarray(tok)[0])  # blocks inside the meter window
-        self.telemetry["prefill"].add(tele, len(request.prompt))
-
-        slot = state.slot
-        self._last_tok[slot, 0] = first
-        self._seeds[slot] = state.seed
-        self._gen_counts[slot] = 1
-        self._temps[slot] = temp
-        self._topks[slot] = topk
-        state.first_token_at = time.perf_counter()
-        state.tokens.append(first)
-        events: list[Token | Completion] = [
-            Token(state.request_id, first, 0, "prefill", self._steps)
-        ]
-        if state.done:
-            events.append(self._finish(slot))
+            events = []
+            self._commit_slot(state, tok, b1_cache, events)
+        self.telemetry["prefill"].add(tele, len(context))
         return events
 
+    def _commit_slot(
+        self,
+        state: RequestState,
+        tok: jax.Array,
+        b1_cache: Any,
+        events: list[Token | Completion],
+    ) -> None:
+        """Insert a fully prefilled batch-1 cache into the slot, record the
+        sampled token and arm the slot for decode."""
+        slot = state.slot
+        context = self._ctx_len(state)
+        if self.paged:
+            # pad the b1 cache's sequence up to whole pages so the insert
+            # scatters complete pages (prefill already built it that long)
+            page_row = self._slot_page_row(slot)
+        else:
+            page_row = jnp.zeros((1,), jnp.int32)  # unused operand
+        self.cache = self._insert_fn(
+            self.cache, b1_cache, jnp.asarray(slot, jnp.int32), page_row
+        )
+        first = int(np.asarray(tok)[0])  # blocks inside the meter window
+
+        temp, topk = self._request_knobs(state)
+        gen_index = len(state.tokens)
+        self._last_tok[slot, 0] = first
+        self._seeds[slot] = state.seed
+        self._gen_counts[slot] = gen_index + 1
+        self._temps[slot] = temp
+        self._topks[slot] = topk
+        # kv.lengths needs no sync: alloc_slot/ensure already tracked the
+        # context through admission and the chunk loop
+        self._lengths[slot] = context
+        if state.first_token_at is None:
+            state.first_token_at = time.perf_counter()
+        state.tokens.append(first)
+        events.append(
+            Token(state.request_id, first, gen_index, "prefill", self._steps)
+        )
+        if state.done:
+            events.append(self._finish(slot))
+
     def _decode_active(self) -> list[Token | Completion]:
-        active = dict(self.scheduler.active)  # slot -> state
+        if self.paged:
+            # grow page capacity for this step's writes up front; under
+            # pool pressure this preempts the youngest request (which may
+            # shrink the decoding set)
+            for slot in sorted(self.scheduler.active):
+                if slot in self._prefilling:
+                    continue
+                if slot not in self.scheduler.active:
+                    continue  # preempted by an earlier slot's ensure
+                self._ensure_pages(slot, int(self._lengths[slot]) + 1)
+        active = {
+            slot: state
+            for slot, state in self.scheduler.active.items()
+            if slot not in self._prefilling
+        }
+        if not active:
+            return []
+        if self.kv is None:
+            pages = jnp.zeros((1,), jnp.int32)  # unused operand
+        else:
+            if self._pages_version != self.kv.version:
+                self._pages_op = jnp.asarray(self.kv.array())
+                self._pages_version = self.kv.version
+            pages = self._pages_op
         self.monitor.start()
         with self._phase("decode"), meter_window(self.meter) as tele:
             tok, self.cache = self._decode_fn(
                 self.params,
                 jnp.asarray(self._last_tok),
                 self.cache,
+                pages,
                 jnp.asarray(self._seeds),
                 jnp.asarray(self._gen_counts),
                 jnp.asarray(self._temps),
@@ -515,6 +995,9 @@ class ServeEngine:
             token = int(toks[slot])
             self._last_tok[slot, 0] = token
             self._gen_counts[slot] += 1
+            # kv.lengths needs no sync: _ensure_pages set it to this very
+            # value before the step ran
+            self._lengths[slot] += 1
             index = len(state.tokens)
             state.tokens.append(token)
             events.append(
@@ -527,6 +1010,7 @@ class ServeEngine:
     def _finish(self, slot: int) -> Completion:
         state = self.scheduler.release(slot)
         self._gen_counts[slot] = 0
+        self._lengths[slot] = 0
         completion = Completion(
             request_id=state.request_id,
             prompt=state.request.prompt,

@@ -1,0 +1,32 @@
+"""``repro.serve.kv`` — the block-paged KV-cache memory subsystem.
+
+The serving engine's hottest memory structure is the KV cache.  The
+contiguous layout reserves ``max_len`` rows per slot — a worst-case
+reservation, so a short request strands the tail of its slot and total
+resident tokens is fixed at ``n_slots x max_len`` no matter what the
+traffic looks like.  This package applies the paper's blockification move
+to serving memory: the cache becomes an explicit *function block* with its
+own storage (:class:`PagePool`), its own interface
+(``alloc`` / ``ensure`` / ``free`` with exact accounting) and its own
+per-request indirection (:class:`PageTable`), vLLM-style.
+
+* :class:`PagePool` — host-side accounting for a device pool of
+  ``n_pages`` fixed-size pages (plus one *null page* that absorbs writes
+  from freed or still-prefilling slots).  Deterministic reuse order,
+  double-free and foreign-page detection, :class:`PoolExhausted` on
+  overflow.
+* :class:`PageTable` — per-slot page lists and resident-token lengths;
+  its :meth:`PageTable.array` view is the ``(n_slots, max_pages)`` int32
+  operand the jitted decode program gathers K/V through.
+
+Capacity becomes a *shared* pool: admission gates on free pages instead
+of free slots, eviction returns pages immediately, and total resident
+tokens is bounded by ``n_pages x page_size`` — not ``n_slots x max_len``.
+"""
+
+from repro.serve.kv.pool import (  # noqa: F401
+    PagePool,
+    PageTable,
+    PoolExhausted,
+    pages_for,
+)

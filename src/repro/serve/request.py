@@ -94,6 +94,8 @@ class RequestState:
     submitted_at: float
     first_token_at: float | None = None
     tokens: list[int] = dataclasses.field(default_factory=list)
+    #: monotonic admission order (preemption evicts the youngest first)
+    admit_seq: int = -1
 
     @property
     def done(self) -> bool:

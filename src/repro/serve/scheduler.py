@@ -1,4 +1,4 @@
-"""Continuous-batching admission control: slots, queueing, token budget.
+"""Continuous-batching admission control: slots, queueing, budget, pages.
 
 The engine's KV cache is a fixed array of ``n_slots`` batch rows.  The
 scheduler owns which request occupies which slot: submitted requests wait
@@ -8,16 +8,22 @@ the next waiting request reuses it on the following step, while the other
 slots keep decoding.  This is continuous batching: the batch recomposes
 every step instead of draining entirely before refilling.
 
+With a paged KV cache (``kv`` is a :class:`repro.serve.kv.PageTable`)
+admission additionally gates on **free pages**: a slot is only a batch
+row, the tokens live in the shared pool, so what bounds concurrency is
+pages — not ``n_slots x max_len``.  Admission allocates the request's
+initial pages (the prompt, or just its first chunk under chunked
+prefill), ``release`` and ``preempt`` return every page to the pool.
+
 The *token budget* (``max_tokens_per_step``) bounds how much work one
 engine step may inject, in tokens: a decode step costs one token per
-active slot, an admission costs the prompt length its prefill program
-actually runs (bucket-padded when the engine pads) plus the admitted
-request's own decode token this step.  A small
-budget keeps per-step latency flat under bursty arrivals (prefills are
-spread over steps instead of stalling every in-flight decode at once); a
-large budget maximises admission throughput.  When nothing is active and
-nothing was admitted yet, one admission is always allowed regardless of
-budget, so a prompt longer than the budget cannot deadlock the queue.
+decoding slot, an admission costs the tokens its first prefill program
+call actually runs (bucket-padded, or one chunk) plus the admitted
+request's own decode token this step.  A small budget keeps per-step
+latency flat under bursty arrivals; a large budget maximises admission
+throughput.  When no other work is running this step, one admission is
+always allowed regardless of budget, so a prompt longer than the budget
+cannot deadlock the queue.
 """
 
 from __future__ import annotations
@@ -33,15 +39,26 @@ class Scheduler:
         n_slots: int,
         max_tokens_per_step: int | None = None,
         prompt_cost=None,
+        kv=None,
+        admit_tokens=None,
     ) -> None:
         if n_slots < 1:
             raise ValueError("need at least one slot")
         self.n_slots = n_slots
         self.max_tokens_per_step = max_tokens_per_step
-        #: maps a prompt length to the tokens its prefill actually runs —
-        #: the engine passes its bucket-padded length so the budget bounds
-        #: the real program size, not the nominal prompt
-        self.prompt_cost = prompt_cost or (lambda n: n)
+        #: maps a waiting RequestState to the budget tokens its admission
+        #: runs this step — the engine passes bucket-padded context length,
+        #: or one chunk under chunked prefill
+        self.prompt_cost = prompt_cost or (
+            lambda state: len(state.request.prompt) + len(state.tokens)
+        )
+        #: maps a waiting RequestState to the tokens its admission must
+        #: hold *pages* for right now (full context, or the first chunk)
+        self.admit_tokens = admit_tokens or (
+            lambda state: len(state.request.prompt) + len(state.tokens)
+        )
+        #: page table (paged KV mode) — admission allocates, release frees
+        self.kv = kv
         # pop() takes from the end: keep slot 0 first for readable traces
         self._free: list[int] = list(range(n_slots - 1, -1, -1))
         self.waiting: deque[RequestState] = deque()
@@ -49,6 +66,9 @@ class Scheduler:
         #: admissions per slot over the scheduler's lifetime — any count > 1
         #: is an observed slot reuse (the continuous-batching signature)
         self.admitted_per_slot: dict[int, int] = {}
+        #: preempted-and-requeued requests (paged mode under page pressure)
+        self.preemptions = 0
+        self._admit_seq = 0
 
     # -- queue side -----------------------------------------------------------
     def enqueue(self, state: RequestState) -> None:
@@ -63,28 +83,42 @@ class Scheduler:
         return len(self._free)
 
     # -- per-step admission ----------------------------------------------------
-    def admissions(self) -> list[RequestState]:
+    def admissions(self, spent: int | None = None) -> list[RequestState]:
         """Admit waiting requests into free slots for this engine step.
 
-        FIFO, budget-capped (decode tokens for the currently active slots
-        are charged first), and guaranteed to make progress when the
-        engine is otherwise idle.
+        FIFO, budget-capped and page-gated.  ``spent`` is the budget this
+        step has already committed (decode tokens + planned prefill
+        chunks); defaults to one decode token per active slot.  Guaranteed
+        to make progress when the engine is otherwise idle.
         """
         admitted: list[RequestState] = []
         budget = self.max_tokens_per_step
-        spent = len(self.active)  # this step's decode tokens
+        if spent is None:
+            spent = len(self.active)  # this step's decode tokens
+        progressing = spent > 0
         while self.waiting and self._free:
             nxt = self.waiting[0]
             # +1: the admitted request decodes in this same step too
-            cost = self.prompt_cost(len(nxt.request.prompt)) + 1
+            cost = self.prompt_cost(nxt) + 1
             if budget is not None and spent + cost > budget:
-                if self.active or admitted:
-                    break  # decode (or earlier admissions) proceed first
+                if progressing or self.active or admitted:
+                    break  # decode / chunks / earlier admissions run first
                 # idle engine: admit anyway — a prompt longer than the
                 # budget must not wedge the queue
+            if self.kv is not None and not self.kv.can_admit(
+                self.admit_tokens(nxt)
+            ):
+                # no pages: in-flight requests return theirs on release /
+                # preemption; an idle pool always fits one request because
+                # submit() rejects anything larger than the whole pool
+                break
             self.waiting.popleft()
             slot = self._free.pop()
             nxt.slot = slot
+            nxt.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            if self.kv is not None:
+                self.kv.alloc_slot(slot, self.admit_tokens(nxt))
             self.active[slot] = nxt
             self.admitted_per_slot[slot] = (
                 self.admitted_per_slot.get(slot, 0) + 1
@@ -94,9 +128,28 @@ class Scheduler:
         return admitted
 
     def release(self, slot: int) -> RequestState:
-        """Evict a finished request and free its slot for reuse."""
+        """Evict a finished request: free its slot for reuse and return
+        its pages to the pool."""
         state = self.active.pop(slot)
         self._free.append(slot)
+        if self.kv is not None:
+            self.kv.free_slot(slot)
+        return state
+
+    def preempt(self, slot: int) -> RequestState:
+        """Evict a *running* request under page pressure: pages return to
+        the pool and the request requeues at the FRONT of the waiting
+        queue with its generated tokens intact — re-admission re-prefills
+        ``prompt + tokens`` and continues exactly where it stopped
+        ((seed, token-index)-keyed sampling is batch-independent, so the
+        continuation is token-identical)."""
+        state = self.active.pop(slot)
+        self._free.append(slot)
+        if self.kv is not None:
+            self.kv.free_slot(slot)
+        state.slot = -1
+        self.waiting.appendleft(state)
+        self.preemptions += 1
         return state
 
     # -- reporting -------------------------------------------------------------
