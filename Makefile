@@ -25,15 +25,24 @@ report:
 
 # Serving load smoke: Poisson arrival trace through the ServeEngine on the
 # reduced config — tok/s, p50/p99 latency and joules/token with provenance.
+# The machine-readable snapshot lands in BENCH_serve.json for run-over-run
+# diffs.
 .PHONY: serve-bench
 serve-bench:
-	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --meter auto
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --meter auto --json-out BENCH_serve.json
 
 # Same trace on the block-paged KV cache (chunked prefill on): pool
 # utilization / stranded / fragmentation stats alongside the tok/s numbers.
 .PHONY: serve-bench-paged
 serve-bench-paged:
-	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --meter auto --page-size 16 --prefill-chunk 8
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --meter auto --page-size 16 --prefill-chunk 8 --json-out BENCH_serve_paged.json
+
+# Static analysis: legality + hot-path + paging passes over every zoo
+# (arch, phase) program and two tiny serve engines, ratcheted against the
+# checked-in analysis_baseline.json — CI fails only on NEW findings.
+.PHONY: analyze
+analyze:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) -m repro.analysis.lint --fail-on-new
 
 .PHONY: deps-dev
 deps-dev:

@@ -12,13 +12,19 @@ sustained-load throughput (tok/s), request latency and TTFT percentiles
 
 ``--fast`` shrinks the trace for CI (``make serve-bench``).  ``--plan-dir``
 binds each phase to its committed zoo plan, so the benchmark measures the
-*deployed* offload pattern, not the default bindings.
+*deployed* offload pattern, not the default bindings.  ``--json-out PATH``
+additionally writes a machine-readable snapshot (``BENCH_serve.json``) with
+throughput, percentiles, energy provenance, per-phase telemetry, engine
+stats/metrics and the git revision, so successive runs diff cleanly.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
 import os
+import subprocess
 import sys
 import time
 
@@ -60,6 +66,99 @@ def run_trace(engine, requests, arrivals, max_seconds: float = 600.0):
     return time.perf_counter() - t0
 
 
+def git_sha() -> str:
+    """Revision stamp for the snapshot; "unknown" outside a git checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001 — the snapshot is still useful
+        return "unknown"
+
+
+def snapshot(engine, args, makespan, completions) -> dict:
+    """The machine-readable result record ``--json-out`` writes."""
+    stats = engine.stats
+    gen_tokens = sum(len(c.tokens) for c in completions)
+    latencies = [c.latency for c in completions]
+    ttfts = [c.ttft for c in completions]
+    phases = {}
+    for phase in ("prefill", "decode"):
+        t = engine.telemetry[phase]
+        phases[phase] = {
+            "calls": t.calls,
+            "seconds": t.seconds,
+            "tokens": t.tokens,
+            "tokens_per_second": t.tokens_per_second,
+            "joules": t.joules,
+            "joules_per_token": t.joules_per_token,
+            "provenance": t.provenance,
+        }
+    joules = (
+        (engine.telemetry["prefill"].joules or 0.0)
+        + (engine.telemetry["decode"].joules or 0.0)
+        if any(engine.telemetry[p].joules is not None
+               for p in ("prefill", "decode"))
+        else None
+    )
+    return {
+        "schema": 1,
+        "benchmark": "serve_load",
+        "git_sha": git_sha(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "arch": engine.cfg.name,
+        "reduced": bool(args.reduced),
+        "trace": {
+            "requests": args.requests,
+            "rate_per_s": args.rate,
+            "prompt_len": args.prompt_len,
+            "len_jitter": args.len_jitter,
+            "gen": args.gen,
+            "gen_jitter": args.gen_jitter,
+            "seed": args.seed,
+            "fast": bool(args.fast),
+        },
+        "engine": {
+            "slots": engine.n_slots,
+            "max_len": engine.max_len,
+            "sampler": args.sampler,
+            "meter": args.meter,
+            "plan_dir": args.plan_dir,
+            "page_size": args.page_size,
+            "n_pages": args.n_pages,
+            "prefill_bucket": args.prefill_bucket,
+            "prefill_chunk": args.prefill_chunk,
+            "step_budget": args.step_budget,
+        },
+        "makespan_s": makespan,
+        "throughput_tok_s": gen_tokens / makespan if makespan else 0.0,
+        "generated_tokens": gen_tokens,
+        "latency_ms": {
+            "p50": percentile(latencies, 0.5) * 1e3,
+            "p99": percentile(latencies, 0.99) * 1e3,
+        },
+        "ttft_ms": {
+            "p50": percentile(ttfts, 0.5) * 1e3,
+            "p99": percentile(ttfts, 0.99) * 1e3,
+        },
+        "energy": {
+            "joules": joules,
+            "joules_per_token": (
+                joules / max(gen_tokens, 1) if joules is not None else None
+            ),
+            "provenance": (
+                engine.telemetry["decode"].provenance
+                or engine.telemetry["prefill"].provenance
+            ),
+        },
+        "phases": phases,
+        "stats": dataclasses.asdict(stats),
+        "metrics": engine.metrics(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     add_engine_args(ap)
@@ -72,6 +171,9 @@ def main() -> None:
     ap.add_argument("--gen-jitter", type=int, default=4)
     ap.add_argument("--fast", action="store_true",
                     help="tiny trace on the reduced config (CI smoke)")
+    ap.add_argument("--json-out", default=None,
+                    help="write a machine-readable snapshot (e.g. "
+                         "BENCH_serve.json) next to the printed report")
     args = ap.parse_args()
     if args.fast:
         args.reduced = True
@@ -136,6 +238,13 @@ def main() -> None:
           f"max {stats.max_active} concurrent, "
           f"{stats.steps} engine steps")
     print(format_kv_metrics(engine))
+
+    if args.json_out:
+        record = snapshot(engine, args, makespan, completions)
+        with open(args.json_out, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"snapshot written: {args.json_out}")
 
 
 if __name__ == "__main__":

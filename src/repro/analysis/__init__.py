@@ -1,0 +1,60 @@
+"""repro.analysis — static analysis over traced programs (paper Step 1).
+
+Three passes, each producing typed :class:`~repro.analysis.Diagnostic`s:
+
+* **legality** (``repro.analysis.legality``) — classify every shelf-block
+  (block, target) binding legal / illegal / unknown before measurement;
+  feeds ``BindingSpace.mark_illegal`` so search strategies prune instead
+  of timing.
+* **hotpath** (``repro.analysis.hotpath``) — lint jitted serve programs
+  for host-sync, retrace-risk, callbacks and constant-capture bloat.
+* **paging** (``repro.analysis.paging``) — prove the paged-KV page-table
+  operand free of page aliasing and freed-slot writes.
+
+``python -m repro.analysis.lint`` runs all passes over the configs zoo and
+live engines, diffing against the checked-in ``analysis_baseline.json``.
+"""
+
+from repro.analysis.diagnostics import (  # noqa: F401
+    AnalysisReport,
+    Baseline,
+    Diagnostic,
+)
+from repro.analysis.features import (  # noqa: F401
+    ProgramFeatures,
+    extract_features,
+    trace_features,
+)
+from repro.analysis.hotpath import (  # noqa: F401
+    ProgramSet,
+    lint_traced_program,
+)
+from repro.analysis.legality import (  # noqa: F401
+    BlockVerdict,
+    LegalityReport,
+    TargetConstraints,
+    check_binding_space,
+)
+from repro.analysis.paging import (  # noqa: F401
+    PageAliasError,
+    assert_page_table,
+    check_page_table,
+)
+
+__all__ = [
+    "AnalysisReport",
+    "Baseline",
+    "Diagnostic",
+    "ProgramFeatures",
+    "extract_features",
+    "trace_features",
+    "ProgramSet",
+    "lint_traced_program",
+    "BlockVerdict",
+    "LegalityReport",
+    "TargetConstraints",
+    "check_binding_space",
+    "PageAliasError",
+    "assert_page_table",
+    "check_page_table",
+]

@@ -1,0 +1,161 @@
+"""Deep structural features of a traced program (``ClosedJaxpr``).
+
+``repro.core.jaxpr_analysis`` stays the histogram/FLOPs walker (the Deckard
+characteristic-vector analogue); this module layers the facts the analysis
+passes decide on: the full primitive set including sub-jaxprs, the dtype
+universe, control-flow and callback presence, baked-in constant sizes and
+dynamic-shape detection.  Everything here is pure trace inspection — no
+compilation, no execution.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.extend.core as jex_core
+
+from repro.core import jaxpr_analysis
+
+#: Primitives that re-enter Python from inside a trace.  Any of these in a
+#: jitted hot-path program forces a host round-trip per call.
+CALLBACK_PRIMITIVES = frozenset(
+    {"pure_callback", "io_callback", "debug_callback", "callback"}
+)
+
+#: Control-flow primitives (the paper's "loop statements" at trace level).
+CONTROL_FLOW_PRIMITIVES = frozenset({"scan", "while", "cond"})
+
+
+@dataclasses.dataclass
+class ProgramFeatures:
+    """Facts about one traced program, for legality and hot-path passes."""
+
+    primitives: frozenset[str]  # deep: includes all sub-jaxpr eqns
+    dtypes: frozenset[str]  # every aval dtype seen (inputs + intermediates)
+    n_eqns: int
+    has_scan: bool
+    has_while: bool
+    has_cond: bool
+    callbacks: tuple[str, ...]  # callback primitives present, sorted
+    const_bytes: int  # total bytes of captured (baked-in) constants
+    largest_const_bytes: int
+    n_consts: int
+    dynamic_shapes: bool  # any aval dimension not a static int
+    flops: float  # dot+conv+fft estimate, scan-scaled
+    dot_flops: float
+    out_avals: tuple[Any, ...]  # abstract outputs (for host-sync sizing)
+    report: jaxpr_analysis.JaxprReport  # the underlying histogram report
+
+
+def _walk_avals(jaxpr, seen_dtypes: set, dyn: list) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is None:
+                continue
+            dt = getattr(aval, "dtype", None)
+            if dt is not None:
+                seen_dtypes.add(str(dt))
+            for d in getattr(aval, "shape", ()) or ():
+                if not isinstance(d, int):
+                    dyn.append(d)
+        for sub in jaxpr_analysis._sub_jaxprs(eqn):
+            n += _walk_avals(sub, seen_dtypes, dyn)
+    return n
+
+
+def _collect_consts(node: Any, out: list) -> None:
+    """Constants captured anywhere in the program, including inside nested
+    ``pjit``/``scan``/``cond`` ClosedJaxprs — ``jax.jit`` hoists a closed-
+    over array onto the *inner* pjit jaxpr's consts, not the outer one."""
+    if isinstance(node, jex_core.ClosedJaxpr):
+        out.extend(getattr(node, "consts", []) or [])
+        node = node.jaxpr
+    if not isinstance(node, jex_core.Jaxpr):
+        return
+    for eqn in node.eqns:
+        for v in eqn.params.values():
+            if isinstance(v, (jex_core.ClosedJaxpr, jex_core.Jaxpr)):
+                _collect_consts(v, out)
+            elif isinstance(v, (tuple, list)):
+                for e in v:
+                    if isinstance(e, (jex_core.ClosedJaxpr, jex_core.Jaxpr)):
+                        _collect_consts(e, out)
+
+
+def _nbytes(c: Any) -> int:
+    nb = getattr(c, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    size = getattr(c, "size", None)
+    itemsize = getattr(getattr(c, "dtype", None), "itemsize", None)
+    if size is not None and itemsize is not None:
+        return int(size) * int(itemsize)
+    return 0
+
+
+def extract_features(closed: Any) -> ProgramFeatures:
+    """Features of a ``ClosedJaxpr`` (or bare ``Jaxpr``)."""
+    report = jaxpr_analysis.analyze_jaxpr(closed)
+    jaxpr = closed.jaxpr if hasattr(closed, "jaxpr") else closed
+
+    dtypes: set[str] = set()
+    dyn: list[Any] = []
+    for v in list(jaxpr.invars) + list(jaxpr.outvars):
+        aval = getattr(v, "aval", None)
+        if aval is None:
+            continue
+        dt = getattr(aval, "dtype", None)
+        if dt is not None:
+            dtypes.add(str(dt))
+        for d in getattr(aval, "shape", ()) or ():
+            if not isinstance(d, int):
+                dyn.append(d)
+    n_eqns = _walk_avals(jaxpr, dtypes, dyn)
+
+    consts: list[Any] = []
+    _collect_consts(closed, consts)
+    const_sizes = [_nbytes(c) for c in consts]
+
+    prims = frozenset(report.histogram)
+    callbacks = tuple(sorted(prims & CALLBACK_PRIMITIVES))
+    out_avals = tuple(
+        getattr(v, "aval", None) for v in jaxpr.outvars
+    )
+    return ProgramFeatures(
+        primitives=prims,
+        dtypes=frozenset(dtypes),
+        n_eqns=n_eqns,
+        has_scan=report.has_scan,
+        has_while=report.has_while,
+        has_cond="cond" in prims,
+        callbacks=callbacks,
+        const_bytes=sum(const_sizes),
+        largest_const_bytes=max(const_sizes, default=0),
+        n_consts=len(consts),
+        dynamic_shapes=bool(dyn),
+        flops=report.flops,
+        dot_flops=report.dot_flops,
+        out_avals=out_avals,
+        report=report,
+    )
+
+
+def trace_features(
+    fn: Callable[..., Any], *example_args: Any, **example_kwargs: Any
+) -> ProgramFeatures:
+    """Trace ``fn`` abstractly (no execution) and extract its features.
+
+    Works through ``jax.jit`` wrappers — ``make_jaxpr`` inlines the pjit
+    call into a sub-jaxpr the walkers descend into.
+    """
+    closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+    return extract_features(closed)
+
+
+def jaxpr_of(fn: Callable[..., Any], *example_args: Any) -> jex_core.ClosedJaxpr:
+    return jax.make_jaxpr(fn)(*example_args)

@@ -1,0 +1,225 @@
+"""Offload-legality pass: which (block, target) bindings may be measured.
+
+The paper's Step 1 decides *statically* which function blocks are offload
+candidates before any compilation or measurement is spent on them.  Here a
+binding is classified from cheap facts first:
+
+1. **registry metadata** — ``repro.kernels.BLOCK_LEGALITY`` declares each
+   shelf implementation's platform and dtype envelope (a Pallas TPU kernel
+   is illegal on a CPU/GPU host backend);
+2. **program features** — dtype universe and dynamic-shape presence of the
+   traced step (a float64 program cannot bind a float32-only kernel);
+3. **probe trace** — the step is abstractly re-traced under the candidate
+   binding (``jax.make_jaxpr``, no compile, no execution); a trace failure
+   is a definitive illegal verdict.
+
+Verdicts are ``legal`` / ``illegal`` / ``unknown`` (no metadata and probe
+disabled).  Illegal pairs feed ``BindingSpace.mark_illegal`` so search
+strategies prune them instead of timing (or crashing on) them.
+
+Platform-dependent verdicts carry severity ``info`` — they flip between a
+CPU CI host and a TPU production host, so they never enter the lint
+baseline ratchet.  Structural verdicts (dtype, trace failure) are
+``warning``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+from repro.analysis.diagnostics import Diagnostic
+from repro.analysis.features import ProgramFeatures, trace_features
+
+LEGAL = "legal"
+ILLEGAL = "illegal"
+UNKNOWN = "unknown"
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetConstraints:
+    """Static envelope of one registered block implementation.
+
+    ``requires_platform`` — JAX backend names the implementation lowers on
+    (empty = any).  ``dtypes`` — float dtypes the kernel supports (empty =
+    any); only *floating* program dtypes are checked against it, since
+    integer index/id operands ride along in every program.
+    """
+
+    requires_platform: tuple[str, ...] = ()
+    dtypes: tuple[str, ...] = ()
+    allow_dynamic_shapes: bool = True
+    notes: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockVerdict:
+    block: str
+    target: str
+    status: str  # legal | illegal | unknown
+    reason: str = ""
+    severity: str = "info"  # severity of the diagnostic this verdict emits
+
+
+@dataclasses.dataclass
+class LegalityReport:
+    program: str
+    platform: str
+    verdicts: list[BlockVerdict] = dataclasses.field(default_factory=list)
+    features: ProgramFeatures | None = None
+
+    @property
+    def illegal(self) -> dict[tuple[str, str], str]:
+        """The ``(block, target) -> reason`` map ``mark_illegal`` consumes."""
+        return {
+            (v.block, v.target): v.reason
+            for v in self.verdicts
+            if v.status == ILLEGAL
+        }
+
+    def counts(self) -> dict[str, int]:
+        out = {LEGAL: 0, ILLEGAL: 0, UNKNOWN: 0}
+        for v in self.verdicts:
+            out[v.status] += 1
+        return out
+
+    def diagnostics(self) -> list[Diagnostic]:
+        diags = []
+        for v in self.verdicts:
+            if v.status == LEGAL:
+                continue
+            code = "illegal-binding" if v.status == ILLEGAL else "no-metadata"
+            diags.append(
+                Diagnostic(
+                    pass_name="legality",
+                    code=code,
+                    severity=v.severity if v.status == ILLEGAL else "info",
+                    program=self.program,
+                    subject=f"{v.block}->{v.target}",
+                    message=v.reason or f"no legality metadata for {v.target}",
+                )
+            )
+        return diags
+
+
+def _float_dtypes(dtypes: frozenset[str]) -> set[str]:
+    return {d for d in dtypes if d.startswith(("float", "bfloat", "complex"))}
+
+
+def shelf_constraints() -> Mapping[tuple[str, str], TargetConstraints]:
+    """The kernel shelf's declared legality metadata (lazy import: kernels
+    imports this module for the TargetConstraints type)."""
+    from repro.kernels import BLOCK_LEGALITY
+
+    return BLOCK_LEGALITY
+
+
+def classify_binding(
+    block: str,
+    target: str,
+    spec: TargetConstraints | None,
+    features: ProgramFeatures | None,
+    platform: str,
+) -> BlockVerdict:
+    """Metadata-only classification of one (block, target) binding."""
+    if spec is None:
+        return BlockVerdict(block, target, UNKNOWN,
+                            reason="no registry legality metadata")
+    if spec.requires_platform and platform not in spec.requires_platform:
+        return BlockVerdict(
+            block, target, ILLEGAL,
+            reason=(
+                f"requires platform {'/'.join(spec.requires_platform)}, "
+                f"host backend is {platform}"
+            ),
+            severity="info",  # flips between CI (cpu) and prod (tpu) hosts
+        )
+    if features is not None:
+        if spec.dtypes:
+            unsupported = _float_dtypes(features.dtypes) - set(spec.dtypes)
+            if unsupported:
+                return BlockVerdict(
+                    block, target, ILLEGAL,
+                    reason=(
+                        f"program uses {sorted(unsupported)}, kernel "
+                        f"supports {list(spec.dtypes)}"
+                    ),
+                    severity="warning",
+                )
+        if features.dynamic_shapes and not spec.allow_dynamic_shapes:
+            return BlockVerdict(
+                block, target, ILLEGAL,
+                reason="program has dynamic shapes; kernel requires static",
+                severity="warning",
+            )
+    return BlockVerdict(block, target, LEGAL)
+
+
+def check_binding_space(
+    space: Any,
+    args: Sequence[Any],
+    constraints: Mapping[tuple[str, str], TargetConstraints] | None = None,
+    platform: str | None = None,
+    probe_trace: bool = True,
+    program: str = "",
+) -> LegalityReport:
+    """Classify every (block, target) choice of a ``BindingSpace``.
+
+    Cheap checks run first (registry metadata against the host platform and
+    the program's dtype/shape features); only pairs that survive them are
+    probe-traced under their single-block binding — ``jax.make_jaxpr``
+    only, so an hours-long candidate compile is never spent on a binding
+    the probe can reject (the paper's FPGA pre-filter economics).
+    """
+    import jax
+
+    from repro.core.planner.space import DEFAULT_TARGET
+
+    if constraints is None:
+        constraints = shelf_constraints()
+    if platform is None:
+        platform = jax.default_backend()
+    report = LegalityReport(program=program or space.tag, platform=platform)
+
+    features: ProgramFeatures | None = None
+    try:
+        features = trace_features(space.build(space.baseline()), *args)
+    except Exception:  # noqa: BLE001 — feature-less classification still works
+        features = None
+    report.features = features
+
+    baseline = space.baseline()
+    for i, axis in enumerate(space.axes):
+        for c, label in enumerate(axis.choices):
+            if label == DEFAULT_TARGET:
+                continue
+            verdict = classify_binding(
+                axis.name, label, constraints.get((axis.name, label)),
+                features, platform,
+            )
+            if verdict.status == LEGAL and probe_trace:
+                cand = list(baseline)
+                cand[i] = c
+                try:
+                    jax.make_jaxpr(space.build(tuple(cand)))(*args)
+                except Exception as e:  # noqa: BLE001 — the probe's verdict
+                    verdict = BlockVerdict(
+                        axis.name, label, ILLEGAL,
+                        reason=f"probe trace failed: {type(e).__name__}: {e}",
+                        severity="warning",
+                    )
+            elif verdict.status == UNKNOWN and probe_trace:
+                # no metadata: the probe alone decides legal-vs-illegal
+                cand = list(baseline)
+                cand[i] = c
+                try:
+                    jax.make_jaxpr(space.build(tuple(cand)))(*args)
+                    verdict = BlockVerdict(axis.name, label, LEGAL)
+                except Exception as e:  # noqa: BLE001
+                    verdict = BlockVerdict(
+                        axis.name, label, ILLEGAL,
+                        reason=f"probe trace failed: {type(e).__name__}: {e}",
+                        severity="warning",
+                    )
+            report.verdicts.append(verdict)
+    return report

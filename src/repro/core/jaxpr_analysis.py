@@ -38,11 +38,19 @@ class JaxprReport:
     dot_flops: float  # 2*M*N*K summed over dot_generals (static shapes)
     has_scan: bool
     has_while: bool
+    conv_flops: float = 0.0  # conv_general_dilated MACs * 2
+    fft_flops: float = 0.0  # 5*N*log2(N) per transformed axis
+
+    @property
+    def flops(self) -> float:
+        """Total counted FLOPs across dot/conv/fft — the roofline numerator.
+        Counts inside ``scan`` bodies are scaled by trip count."""
+        return self.dot_flops + self.conv_flops + self.fft_flops
 
     def intensity_hint(self, total_bytes: float) -> float:
         if total_bytes <= 0:
             return 0.0
-        return self.dot_flops / total_bytes
+        return self.flops / total_bytes
 
 
 def _sub_jaxprs(eqn) -> list[Any]:
@@ -88,6 +96,39 @@ def _dot_flops(eqn) -> float:
         return 0.0
 
 
+def _conv_flops(eqn) -> float:
+    """conv_general_dilated: 2 MACs per output element per contributing
+    kernel tap — 2 * out_elems * (kernel_elems / out_features) accounts for
+    feature-group division the same way ``launch.hlo_cost`` does."""
+    try:
+        rhs = eqn.invars[1].aval
+        out = eqn.outvars[0].aval
+        dnums = eqn.params["dimension_numbers"]
+        out_feature_dim = out.shape[dnums.out_spec[1]]
+        kernel_elems = math.prod(rhs.shape)
+        out_elems = math.prod(out.shape)
+        return 2.0 * out_elems * max(kernel_elems // max(out_feature_dim, 1), 1)
+    except Exception:  # pragma: no cover - defensive
+        return 0.0
+
+
+def _fft_flops(eqn) -> float:
+    """fft: standard 5*N*log2(N) estimate per transform, times the number
+    of batched transforms (leading, non-transformed axes)."""
+    try:
+        x = eqn.invars[0].aval
+        fft_lengths = tuple(eqn.params.get("fft_lengths") or ())
+        if not fft_lengths:
+            fft_lengths = (x.shape[-1],)
+        n = math.prod(fft_lengths)
+        batch = math.prod(x.shape) / max(
+            math.prod(x.shape[-len(fft_lengths):]), 1
+        )
+        return 5.0 * batch * n * math.log2(max(n, 2))
+    except Exception:  # pragma: no cover - defensive
+        return 0.0
+
+
 # primitive aliases: semantically-equal primitives that different source
 # spellings trace to (x**2 -> integer_pow, jnp.square -> square, ...)
 _CANON = {"square": "integer_pow", "pow": "integer_pow"}
@@ -97,14 +138,20 @@ def analyze_jaxpr(closed: Any) -> JaxprReport:
     hist: Counter[str] = Counter()
     named: list[NamedCall] = []
     dot_flops = 0.0
+    conv_flops = 0.0
+    fft_flops = 0.0
 
     def walk(jaxpr, scale: float = 1.0) -> None:
-        nonlocal dot_flops
+        nonlocal dot_flops, conv_flops, fft_flops
         for eqn in jaxpr.eqns:
             prim = eqn.primitive.name
             hist[_CANON.get(prim, prim)] += 1
             if prim == "dot_general":
                 dot_flops += scale * _dot_flops(eqn)
+            elif prim == "conv_general_dilated":
+                conv_flops += scale * _conv_flops(eqn)
+            elif prim == "fft":
+                fft_flops += scale * _fft_flops(eqn)
             name = eqn.params.get("name")
             if isinstance(name, str):
                 subs = _sub_jaxprs(eqn)
@@ -123,6 +170,8 @@ def analyze_jaxpr(closed: Any) -> JaxprReport:
         dot_flops=dot_flops,
         has_scan=hist.get("scan", 0) > 0,
         has_while=hist.get("while", 0) > 0,
+        conv_flops=conv_flops,
+        fft_flops=fft_flops,
     )
 
 

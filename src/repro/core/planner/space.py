@@ -68,6 +68,17 @@ class SearchSpace:
                     f"axis '{axis.name}' choice index {c} out of range"
                 )
 
+    # -- legality ------------------------------------------------------------
+    def pruned(self, cand: Candidate) -> str | None:
+        """Reason this candidate must not be measured, or None if legal.
+
+        The static pre-filter hook (paper Step 1): strategies consult this
+        before handing a candidate to the MeasurementCache, so statically
+        illegal bindings are skipped instead of timed (or crashed on).
+        The base space prunes nothing.
+        """
+        return None
+
     # -- descriptions --------------------------------------------------------
     def signature(self) -> str:
         """Stable identity of the space (cache/store key component)."""
@@ -215,6 +226,9 @@ class BindingSpace(SearchSpace):
                 targets.insert(0, baseline_target)
             axes.append(Axis(name, tuple(targets)))
         self.axes = tuple(axes)
+        # (block, target) -> reason, filled by mark_illegal() from a
+        # repro.analysis legality report; consulted by pruned()
+        self._illegal: dict[tuple[str, str], str] = {}
 
     @classmethod
     def from_patterns(
@@ -243,6 +257,31 @@ class BindingSpace(SearchSpace):
             registry=registry,
             baseline_target=DEFAULT_TARGET,
         )
+
+    def mark_illegal(
+        self, verdicts: Mapping[tuple[str, str], str]
+    ) -> None:
+        """Record statically-illegal ``(block, target)`` bindings with their
+        reasons.  Candidates selecting any of them are reported by
+        ``pruned()`` and skipped by every search strategy.  The
+        ``DEFAULT_TARGET`` sentinel is never illegal (it is whatever the
+        registry would do anyway), and marking it is rejected."""
+        for (block, target), reason in verdicts.items():
+            if target == DEFAULT_TARGET:
+                raise ValueError(
+                    f"cannot mark default binding of '{block}' illegal"
+                )
+            self._illegal[(block, target)] = str(reason)
+
+    def pruned(self, cand: Candidate) -> str | None:
+        for a, c in zip(self.axes, cand):
+            label = a.choices[c]
+            if label == DEFAULT_TARGET:
+                continue
+            reason = self._illegal.get((a.name, label))
+            if reason is not None:
+                return f"{a.name}->{label}: {reason}"
+        return None
 
     def binding_of(self, cand: Candidate) -> dict[str, str]:
         """The registry binding for a candidate (all axes, sans defaults)."""

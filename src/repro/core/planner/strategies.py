@@ -61,6 +61,8 @@ class PlanReport:
     strategy: str
     generations: list[float] | None = None  # GA: best speedup per generation
     objective: str = "latency"  # objective that selected ``best``
+    pruned: int = 0  # candidates skipped by the static legality pre-filter
+    pruned_reasons: dict[str, str] = dataclasses.field(default_factory=dict)
 
     def trial(self, pattern: Iterable[str]) -> PlanTrial | None:
         key = tuple(sorted(pattern))
@@ -91,11 +93,14 @@ def rank_candidates_by_cost(
     args: Sequence[Any],
     cost_fn: Callable[[SearchSpace, Candidate, Sequence[Any]], float]
     | None = None,
+    skip: Callable[[Candidate], bool] | None = None,
 ) -> list[tuple[float, Candidate]]:
     """Every non-baseline candidate with its static cost estimate, sorted
     cheapest first.  Unrankable candidates (cost_fn raised) estimate as
     inf and sort last; callers detect a fully failed model by checking
-    ``all(est == inf)``.  ``cost_fn`` defaults to the HLO roofline."""
+    ``all(est == inf)``.  ``cost_fn`` defaults to the HLO roofline.
+    ``skip`` drops candidates before the (trace-and-lower) cost model runs
+    — the legality pre-filter seam, so illegal bindings cost nothing."""
     if cost_fn is None:
         from repro.core.planner.cost import make_roofline_cost_fn
 
@@ -104,6 +109,8 @@ def rank_candidates_by_cost(
     ranked: list[tuple[float, Candidate]] = []
     for cand in space.enumerate():
         if cand == baseline:
+            continue
+        if skip is not None and skip(cand):
             continue
         try:
             est = float(cost_fn(space, cand, args))
@@ -155,6 +162,7 @@ class _Run:
         self.trials: list[PlanTrial] = []
         self._seen: dict[tuple, PlanTrial] = {}
         self.baseline_seconds: float | None = None
+        self._pruned: dict[tuple, str] = {}  # canonical -> reason
 
     def _trial_from(
         self, cand: Candidate, m: verify.Measurement, cached: bool
@@ -176,6 +184,27 @@ class _Run:
             self.baseline_seconds = m.seconds
             trial.speedup = 1.0
         return trial
+
+    def is_pruned(self, cand: Candidate) -> bool:
+        """True when the space's static pre-filter rejects this candidate.
+        The baseline is never pruned — every report needs its reference
+        measurement, and the un-offloaded program is definitionally legal."""
+        cand = tuple(cand)
+        if cand == self.space.baseline():
+            return False
+        key = self.space.canonical(cand)
+        if key in self._pruned:
+            return True
+        reason = self.space.pruned(cand)
+        if reason is not None:
+            self._pruned[key] = reason
+            return True
+        return False
+
+    def prune(self, cands: Sequence[Candidate]) -> list[Candidate]:
+        """Drop statically-illegal candidates, recording each skip (once
+        per canonical pattern) for the report's ``pruned`` count."""
+        return [tuple(c) for c in cands if not self.is_pruned(c)]
 
     def measure(self, cand: Candidate) -> PlanTrial:
         return self.measure_many([cand])[0]
@@ -231,6 +260,11 @@ class _Run:
             strategy=strategy,
             generations=generations,
             objective=self.objective.name,
+            pruned=len(self._pruned),
+            pruned_reasons={
+                "+".join(f"{n}={t}" for n, t in key): reason
+                for key, reason in self._pruned.items()
+            },
         )
 
 
@@ -265,6 +299,8 @@ class SingleThenCombine(SearchStrategy):
                 cand = list(baseline)
                 cand[i] = c
                 singles.append((i, c, tuple(cand)))
+        # statically-illegal bindings are pruned, not timed (paper Step 1)
+        singles = [s for s in singles if not run.is_pruned(s[2])]
         trials = run.measure_many([cand for _, _, cand in singles])
 
         # best improving choice per axis ("improving" by the configured
@@ -283,7 +319,8 @@ class SingleThenCombine(SearchStrategy):
             # paper: the combination is adopted only if faster than the best
             # single pattern — run.report picks the global minimum, so a
             # slower combination simply doesn't win
-            run.measure(tuple(combo))
+            if not run.is_pruned(tuple(combo)):
+                run.measure(tuple(combo))
 
         return run.report(self.name)
 
@@ -378,7 +415,13 @@ class GeneticSearch(SearchStrategy):
         n_genes = len(cards)
 
         run.measure(space.baseline())
-        fitness = run.score_of
+
+        def fitness(cand: Candidate) -> float:
+            # pruned genomes survive in the pool (their genes may recombine
+            # into legal children) but are never measured and never win
+            if run.is_pruned(cand):
+                return float("inf")
+            return run.score_of(cand)
 
         pop: list[Candidate] = []
         if self.seed_from_cost:
@@ -395,12 +438,15 @@ class GeneticSearch(SearchStrategy):
         for _gen in range(self.generations):
             # measure the whole generation as one batch (the executor may
             # run its members concurrently); fitness below replays from
-            # the per-run trial table
-            run.measure_many(pop)
+            # the per-run trial table.  Pruned members are skipped here.
+            run.measure_many(run.prune(pop))
             scored = sorted(pop, key=fitness)
             # Fig. 4 curve stays a *speedup* (time ratio) regardless of the
             # objective that ranks the population
-            history.append(base / run.measure(scored[0]).seconds)
+            legal_best = next(
+                (c for c in scored if not run.is_pruned(c)), space.baseline()
+            )
+            history.append(base / run.measure(legal_best).seconds)
             nxt: list[Candidate] = scored[: self.elite]
             while len(nxt) < self.population:
 
@@ -472,7 +518,7 @@ class ExhaustiveSearch(SearchStrategy):
             cands = list(space.enumerate())
         if self.include_baseline:
             run.measure(space.baseline())
-        run.measure_many(cands)
+        run.measure_many(run.prune(cands))
         return run.report(self.name)
 
 
@@ -518,7 +564,11 @@ class CostGuidedSearch(SearchStrategy):
                 f"space has {space.size()} candidates; CostGuidedSearch "
                 f"enumerates the space — raise max_enumeration or shrink it"
             )
-        ranked = rank_candidates_by_cost(space, args, self.cost_fn)
+        # legality-pruned candidates are skipped before the cost model even
+        # traces them: an illegal binding may not lower at all
+        ranked = rank_candidates_by_cost(
+            space, args, self.cost_fn, skip=run.is_pruned
+        )
 
         run.measure(space.baseline())
         if ranked and all(est == float("inf") for est, _ in ranked):

@@ -8,6 +8,7 @@ ref/xla/pallas per deployment environment.
 
 import functools
 
+from repro.analysis.legality import TargetConstraints
 from repro.core import blocks
 from repro.kernels import ops, ref  # noqa: F401
 
@@ -68,3 +69,39 @@ SHELF_BLOCKS = tuple(sorted({block for block, _, _ in _SHELF_IMPLS}))
 #: state, which is import-order dependent (e.g. repro.models.attention
 #: re-registers attention/xla at import time).
 SHELF_FINGERPRINT = blocks.implementations_fingerprint(_SHELF_IMPLS)
+
+
+def _legality_metadata() -> dict[tuple[str, str], TargetConstraints]:
+    """Static envelope of every shelf implementation, consumed by the
+    ``repro.analysis.legality`` pre-filter (paper Step 1): ref/xla
+    formulations lower on any backend; the Pallas kernels are compiled
+    Mosaic (``interpret=False``) and only lower on TPU hosts, over the
+    MXU-tileable float dtypes."""
+    anywhere = TargetConstraints()
+    pallas_f32 = TargetConstraints(
+        requires_platform=("tpu",),
+        dtypes=("float32", "bfloat16"),
+        notes="compiled Mosaic kernel; interpret mode is test-only",
+    )
+    out: dict[tuple[str, str], TargetConstraints] = {}
+    for block in ("matmul", "attention", "rmsnorm", "ssd_scan"):
+        out[(block, "ref")] = anywhere
+        out[(block, "xla")] = anywhere
+        out[(block, "pallas")] = pallas_f32
+    out[("fft2d", "xla")] = anywhere
+    out[("fft2d", "pallas")] = TargetConstraints(
+        requires_platform=("tpu",),
+        dtypes=("float32", "complex64"),
+        notes="matmul-DFT stages on the MXU",
+    )
+    out[("lu", "xla")] = anywhere
+    out[("lu", "pallas")] = TargetConstraints(
+        requires_platform=("tpu",),
+        dtypes=("float32",),
+        notes="blocked LU; Schur update is a float32 Pallas kernel",
+    )
+    return out
+
+
+#: (block, target) -> TargetConstraints for the whole shelf.
+BLOCK_LEGALITY = _legality_metadata()

@@ -96,6 +96,7 @@ def build_engine(args: argparse.Namespace) -> ServeEngine:
         prefill_chunk=args.prefill_chunk,
         page_size=args.page_size,
         n_pages=args.n_pages,
+        kv_validate=args.kv_validate,
         seed=args.seed,
         quiet=False,
     )
@@ -151,6 +152,10 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
                     help="KV pool size in pages (default: capacity-"
                          "equivalent, slots * ceil(max_len/page_size); "
                          "smaller over-commits — preemption reclaims)")
+    ap.add_argument("--kv-validate", action="store_true",
+                    help="run the repro.analysis page-aliasing sanitizer "
+                         "after every page-table mutation (debug mode; "
+                         "raises on aliasing or accounting drift)")
     ap.add_argument("--plan-dir", default=None,
                     help="PlanStore directory with verified offload plans")
     ap.add_argument("--plan-key", default=None,

@@ -169,6 +169,7 @@ class OffloadSession:
         min_seconds: float = 0.0,
         rtol: float = 1e-3,
         force_search: bool = False,
+        legality: bool = False,
     ) -> None:
         self.target = target
         self.args = tuple(args)
@@ -197,6 +198,8 @@ class OffloadSession:
         self.min_seconds = min_seconds
         self.rtol = rtol
         self.force_search = force_search
+        self.legality = legality
+        self.legality_report: Any = None
         self._engine = engine
         self._patterns = patterns
         self._blocks = blocks
@@ -311,6 +314,12 @@ class OffloadSession:
         reconciliation, and construction of the ``SubsetSpace`` of
         source-substituted variants.  Space/binding modes: the axes with
         more than one choice.
+
+        With ``legality=True`` (and a ``BindingSpace``) the
+        ``repro.analysis`` legality pass then classifies every (block,
+        target) choice and marks the illegal ones on the space, so the
+        plan stage's strategy prunes them instead of measuring — the
+        paper's static pre-filter, run before any timing is spent.
         """
         self._require("discover", "analyze")
         if self.mode == "app":
@@ -323,6 +332,12 @@ class OffloadSession:
             found: list[Any] = prepared.discoveries
         else:
             found = [a.name for a in self.space.axes if len(a.choices) > 1]
+        if self.legality and isinstance(self._space, BindingSpace):
+            from repro.analysis.legality import check_binding_space
+
+            report = check_binding_space(self._space, self.args)
+            self._space.mark_illegal(report.illegal)
+            self.legality_report = report
         self._done.add("discover")
         return found
 

@@ -243,6 +243,7 @@ def plan_zoo(
     seed: int = 0,
     verify: bool = False,
     force_search: bool = False,
+    legality: bool = False,
     quiet: bool = True,
 ) -> dict[tuple[str, str], OffloadResult]:
     """Search and persist an offload plan for every (arch, kind) cell.
@@ -252,7 +253,10 @@ def plan_zoo(
     ``force_search=True`` to re-measure).  ``executor`` / ``meter`` select
     the ``repro.metering`` measurement executor (e.g. ``device_parallel``
     on multi-device hosts) and power meter (``"auto"`` autodetects, with
-    provenance recorded on every trial).  Returns
+    provenance recorded on every trial).  ``legality=True`` runs the
+    ``repro.analysis`` static legality pass per cell so strategies prune
+    statically-illegal bindings instead of measuring them (required when
+    ``targets`` includes 'pallas' on a non-TPU host).  Returns
     ``{(arch, kind): OffloadResult}``; cells whose step cannot be built or
     measured on this host are skipped with a ``UserWarning`` (regardless
     of ``quiet``, which only silences progress lines) rather than
@@ -300,6 +304,7 @@ def plan_zoo(
                 min_seconds=min_seconds,
                 registry=registry,
                 force_search=force_search,
+                legality=legality,
             )
             result = session.run(verify=verify)
         except Exception as e:  # noqa: BLE001 — keep sweeping other cells
@@ -311,10 +316,12 @@ def plan_zoo(
         results[(arch, kind)] = result
         if not quiet:
             src = "store" if result.from_store else result.plan.strategy
+            pruned = getattr(result.report, "pruned", 0) if result.report else 0
+            pruned_note = f" pruned={pruned}" if pruned else ""
             print(
                 f"zoo cell {arch}:{kind}: {result.mapping or '(baseline)'} "
                 f"speedup={result.speedup:.2f}x via {src} "
-                f"[{result.objective}]"
+                f"[{result.objective}]{pruned_note}"
             )
     return results
 
@@ -337,6 +344,10 @@ def main() -> None:
     ap.add_argument("--targets", default="ref,xla",
                     help="comma-separated targets to search over "
                          "(add 'pallas' on TPU hosts)")
+    ap.add_argument("--legality", action="store_true",
+                    help="run the repro.analysis static legality pass per "
+                         "cell; statically-illegal bindings are pruned "
+                         "from the search instead of measured")
     ap.add_argument("--objective", default="latency",
                     help="latency | perf_per_watt")
     ap.add_argument("--executor", default="serial",
@@ -371,6 +382,7 @@ def main() -> None:
         repeats=args.repeats,
         verify=args.verify,
         force_search=args.force,
+        legality=args.legality,
         quiet=False,
     )
     print(f"planned {len(results)}/{len(cells)} cells -> {args.plan_dir}")

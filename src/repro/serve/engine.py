@@ -192,6 +192,7 @@ class ServeEngine:
         prefill_chunk: int | None = None,
         page_size: int | None = None,
         n_pages: int | None = None,
+        kv_validate: bool = False,
         monitor: StepMonitor | None = None,
         seed: int = 0,
         quiet: bool = True,
@@ -241,7 +242,8 @@ class ServeEngine:
                 # same tokens as the contiguous one, minus the stranding
                 n_pages = n_slots * max_pages
             self.kv: PageTable | None = PageTable(
-                n_slots, max_pages, PagePool(n_pages, page_size)
+                n_slots, max_pages, PagePool(n_pages, page_size),
+                validate=kv_validate,
             )
             self._slot_len = max_pages * page_size
             self._seq_axes = cache_seq_axes(cfg)
@@ -302,16 +304,41 @@ class ServeEngine:
 
         # the cache arguments are donated: the old cache is dead the moment
         # a step returns its successor, and without donation every decode
-        # step / admission would copy the full multi-layer KV cache
-        self._prefill_fn = jax.jit(self._build_prefill())
-        self._decode_fn = jax.jit(self._build_decode(), donate_argnums=(2,))
-        self._insert_fn = jax.jit(
-            self._insert_slot_paged if self.paged else self._insert_slot,
-            donate_argnums=(0,),
+        # step / admission would copy the full multi-layer KV cache.
+        # Every jitted program registers with the repro.analysis hot-path
+        # pass: the wrapper records each call's abstract signature so
+        # engine.lint() can verify the PR-4/5 contracts (decode's host
+        # transfer is token ids only, recomposition never retraces).
+        from repro.analysis.hotpath import ProgramSet
+
+        self.programs = ProgramSet()
+        self._prefill_fn = self.programs.register(
+            "prefill", jax.jit(self._build_prefill()),
+            carry_outputs=(1,),  # the b1 cache goes to insert, not to host
         )
-        self._extend_fn = jax.jit(self._build_extend(), donate_argnums=(2,))
-        self._extend_sample_fn = jax.jit(
-            self._build_extend_sample(), donate_argnums=(2,)
+        self._decode_fn = self.programs.register(
+            "decode", jax.jit(self._build_decode(), donate_argnums=(2,)),
+            loop=True,
+            carry_outputs=(1,),  # the donated successor cache stays on device
+            expected_signatures=1,  # recomposing the batch must not retrace
+        )
+        self._insert_fn = self.programs.register(
+            "insert",
+            jax.jit(
+                self._insert_slot_paged if self.paged else self._insert_slot,
+                donate_argnums=(0,),
+            ),
+            carry_outputs=(0,),  # the whole output is the engine cache
+            expected_signatures=1,  # slot recomposition must not retrace
+        )
+        self._extend_fn = self.programs.register(
+            "extend", jax.jit(self._build_extend(), donate_argnums=(2,)),
+            carry_outputs=(0,),
+        )
+        self._extend_sample_fn = self.programs.register(
+            "extend_sample",
+            jax.jit(self._build_extend_sample(), donate_argnums=(2,)),
+            carry_outputs=(1,),
         )
 
         # host-side per-slot state mirrors (pushed each decode step)
@@ -743,6 +770,25 @@ class ServeEngine:
                 "stranded_pct": stranded,
             }
         return out
+
+    def lint(self) -> list:
+        """Run the ``repro.analysis`` hot-path pass over every program this
+        engine has actually called (host-sync, retrace drift, callbacks,
+        constant capture) plus the page-aliasing sanitizer over the current
+        page-table operand.  Returns the diagnostics; empty means the
+        PR-4/5 serving contracts hold for the traffic served so far."""
+        from repro.analysis.paging import check_page_table
+
+        diags = list(self.programs.lint())
+        if self.kv is not None:
+            diags.extend(
+                check_page_table(
+                    self.kv,
+                    live_slots=set(self.scheduler.active),
+                    program=f"{self.cfg.name}:page-table",
+                )
+            )
+        return diags
 
     # -- phase execution -------------------------------------------------------
     def _padded_len(self, length: int) -> int:

@@ -115,12 +115,21 @@ class PageTable:
     ``len(pages[slot]) * page_size``.
     """
 
-    def __init__(self, n_slots: int, max_pages: int, pool: PagePool) -> None:
+    def __init__(
+        self,
+        n_slots: int,
+        max_pages: int,
+        pool: PagePool,
+        validate: bool = False,
+    ) -> None:
         if max_pages < 1:
             raise ValueError("max_pages must be >= 1")
         self.n_slots = n_slots
         self.max_pages = max_pages
         self.pool = pool
+        #: run :meth:`check_invariants` after every mutation — the runtime
+        #: assertion mode of the ``repro.analysis.paging`` sanitizer
+        self.validate = validate
         self._pages: list[list[int]] = [[] for _ in range(n_slots)]
         self.lengths: list[int] = [0] * n_slots
         #: bumped on every page-list mutation — consumers (the engine's
@@ -176,6 +185,7 @@ class PageTable:
         self._pages[slot] = pages
         self.lengths[slot] = n_tokens
         self.version += 1
+        self._check()
         return pages
 
     def ensure(self, slot: int, n_tokens: int) -> "list[int]":
@@ -194,6 +204,7 @@ class PageTable:
             self._pages[slot].extend(added)
             self.version += 1
         self.lengths[slot] = n_tokens
+        self._check()
         return added
 
     def free_slot(self, slot: int) -> int:
@@ -205,7 +216,41 @@ class PageTable:
         self.lengths[slot] = 0
         if n:
             self.version += 1
+        self._check()
         return n
+
+    # -- invariants --------------------------------------------------------------
+    def _check(self) -> None:
+        if self.validate:
+            self.check_invariants()
+
+    def check_invariants(self) -> None:
+        """Prove the table safe for the paged scatter/gather programs:
+        pool accounting exact, held pages exactly the union of slot page
+        lists, and the ``repro.analysis.paging`` static checks (no page
+        aliasing, no out-of-range ids, page counts cover lengths) clean.
+        Raises :class:`repro.analysis.paging.PageAliasError` otherwise —
+        the runtime assertion mode behind ``validate=True``."""
+        from repro.analysis.paging import PageAliasError, check_page_table
+
+        self.pool.check_leaks()
+        held: set[int] = set()
+        for slot, pages in enumerate(self._pages):
+            for page in pages:
+                if page in held:
+                    break  # reported precisely by check_page_table below
+                held.add(page)
+        if held != self.pool._held:
+            raise PageAliasError(
+                f"table/pool drift: table rows name {sorted(held)} but the "
+                f"pool holds {sorted(self.pool._held)}"
+            )
+        problems = [
+            d for d in check_page_table(self)
+            if d.severity in ("error", "warning")
+        ]
+        if problems:
+            raise PageAliasError("; ".join(str(d) for d in problems))
 
     # -- stats -----------------------------------------------------------------
     @property

@@ -1,0 +1,395 @@
+"""repro.analysis: legality, hot-path and paging passes, planner pruning.
+
+Three populations are covered: seeded-regression fixtures each pass must
+flag (a host-syncing decode loop, a shape-drifting program, a double page
+write), the full configs zoo linted against the checked-in baseline, and
+the legality pre-filter driven through a real OffloadSession search with a
+deterministic fake executor (pruned and unpruned searches must commit the
+same winner).
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    AnalysisReport,
+    Baseline,
+    Diagnostic,
+    PageAliasError,
+    ProgramSet,
+    assert_page_table,
+    check_binding_space,
+    check_page_table,
+    lint_traced_program,
+    trace_features,
+)
+from repro.core.blocks import FunctionBlockRegistry
+from repro.core.planner import BindingSpace, SingleThenCombine
+from repro.offload.session import OffloadSession
+
+BASELINE_PATH = os.path.join(
+    os.path.dirname(__file__), "..", "analysis_baseline.json"
+)
+
+
+# -- diagnostics plumbing -----------------------------------------------------
+
+
+def test_fingerprint_excludes_message_and_ratchet_skips_info():
+    a = Diagnostic("hotpath", "host-sync", "warning", "p", "output[0]", "v1")
+    b = Diagnostic("hotpath", "host-sync", "warning", "p", "output[0]", "v2")
+    assert a.fingerprint == b.fingerprint
+
+    report = AnalysisReport([
+        a,
+        Diagnostic("legality", "illegal-binding", "info", "p", "x->pallas",
+                   "platform"),
+    ])
+    # info diagnostics never enter the ratchet; the warning is new
+    new = report.new_versus(Baseline())
+    assert [d.code for d in new] == ["host-sync"]
+    assert report.new_versus(Baseline({a.fingerprint})) == []
+
+
+def test_unknown_severity_rejected():
+    with pytest.raises(ValueError):
+        Diagnostic("p", "c", "fatal", "prog", "s", "m")
+
+
+# -- feature extraction -------------------------------------------------------
+
+
+def test_trace_features_collects_nested_jit_consts():
+    big = np.ones((512, 1024), np.float32)  # 2 MiB
+
+    @jax.jit
+    def f(x):
+        return x @ big
+
+    feats = trace_features(f, jax.ShapeDtypeStruct((4, 512), jnp.float32))
+    # jit buries captured constants on the inner pjit jaxpr; the walker
+    # must find them there, not on the (empty) outer ClosedJaxpr
+    assert feats.largest_const_bytes >= big.nbytes
+    assert "float32" in feats.dtypes
+    assert feats.flops > 0
+
+
+# -- hot-path pass: seeded regressions ---------------------------------------
+
+
+def _cache_like():
+    return jax.ShapeDtypeStruct((2, 4, 16, 8), jnp.float32)
+
+
+def test_host_sync_flagged_for_logit_returning_decode_loop():
+    """The classic bug: the decode loop returns full logits and the driver
+    argmaxes them on host every step."""
+
+    def decode(tok, cache):
+        logits = jnp.zeros((4, 50_000), jnp.float32) + tok[:, None]
+        return cache, logits  # cache is the carry; logits go to host
+
+    ps = ProgramSet()
+    ps.register("decode", decode, loop=True, carry_outputs=(0,),
+                expected_signatures=1)
+    ps.observe("decode", jax.ShapeDtypeStruct((4,), jnp.int32), _cache_like())
+    codes = [d.code for d in ps.lint()]
+    assert "host-sync" in codes
+
+
+def test_fused_sampling_decode_contract_is_clean():
+    def decode(tok, cache):
+        return jnp.argmax(tok)[None].astype(jnp.int32), cache
+
+    ps = ProgramSet()
+    ps.register("decode", decode, loop=True, carry_outputs=(1,),
+                expected_signatures=1)
+    ps.observe("decode", jax.ShapeDtypeStruct((4,), jnp.int32), _cache_like())
+    assert ps.lint() == []
+
+
+def test_shape_drift_flagged_as_retrace_risk():
+    def prog(x):
+        return x * 2
+
+    ps = ProgramSet()
+    ps.register("insert", prog, expected_signatures=1)
+    ps.observe("insert", jax.ShapeDtypeStruct((4, 8), jnp.float32))
+    assert ps.lint() == []
+    ps.observe("insert", jax.ShapeDtypeStruct((4, 9), jnp.float32))
+    diags = ps.lint()
+    assert [d.code for d in diags] == ["retrace-risk"]
+    assert diags[0].severity == "warning"
+
+
+def test_python_scalar_in_loop_program_flagged():
+    ps = ProgramSet()
+    ps.register("decode", lambda x, t: x * t, loop=True)
+    ps.observe("decode", jax.ShapeDtypeStruct((4,), jnp.float32), 0.8)
+    assert "weak-type" in [d.code for d in ps.lint()]
+
+
+def test_const_capture_flagged():
+    table = np.ones((600, 600), np.float32)  # ~1.4 MB > 1 MiB budget
+
+    @jax.jit
+    def f(x):
+        return x @ table
+
+    diags = lint_traced_program(
+        "prog", f, [jax.ShapeDtypeStruct((2, 600), jnp.float32)]
+    )
+    assert "const-capture" in [d.code for d in diags]
+
+
+def test_observed_wrapper_records_without_changing_results():
+    ps = ProgramSet()
+    wrapped = ps.register("f", lambda x: x + 1)
+    assert int(wrapped(jnp.zeros((), jnp.int32))) == 1
+    assert wrapped.record.calls == 1
+
+
+# -- paging pass: seeded regressions -----------------------------------------
+
+
+def test_double_page_write_is_an_error():
+    # slots 0 and 1 both name page 1 — decode scatter-writes would collide
+    table = np.array([[0, 1], [1, 4]], np.int32)
+    diags = check_page_table(table, null_page=4, page_size=8)
+    assert any(d.code == "page-alias" and d.severity == "error"
+               for d in diags)
+    with pytest.raises(PageAliasError):
+        assert_page_table(table, null_page=4, page_size=8)
+
+
+def test_freed_slot_writes_and_range_errors_flagged():
+    table = np.array([[0, 9], [2, 4]], np.int32)  # 9 out of range
+    diags = check_page_table(
+        table, null_page=4, page_size=8, live_slots={0}
+    )
+    codes = {d.code for d in diags}
+    assert "page-range" in codes
+    assert "freed-slot-write" in codes  # slot 1 is dead but names page 2
+
+
+def test_page_hole_is_a_warning():
+    table = np.array([[4, 2]], np.int32)  # null before a real page
+    diags = check_page_table(table, null_page=4, page_size=8)
+    assert any(d.code == "page-hole" and d.severity == "warning"
+               for d in diags)
+
+
+def test_clean_table_passes():
+    table = np.array([[0, 1], [2, 4]], np.int32)
+    assert check_page_table(table, null_page=4, page_size=8) == []
+
+
+def test_page_table_runtime_validation_catches_induced_alias():
+    from repro.serve.kv.pool import PagePool, PageTable
+
+    table = PageTable(2, 4, PagePool(6, 8), validate=True)
+    table.alloc_slot(0, 10)
+    table.alloc_slot(1, 10)
+    table.check_invariants()  # healthy
+
+    # induce the double-write bug the sanitizer exists for: slot 1's
+    # second page silently aliased onto slot 0's first page
+    table._pages[1][1] = table._pages[0][0]
+    with pytest.raises(PageAliasError):
+        table.ensure(1, 11)  # any mutation re-validates
+
+
+# -- legality pass ------------------------------------------------------------
+
+
+def _toy_registry():
+    reg = FunctionBlockRegistry()
+    reg.register("norm", "ref", lambda x: x * 1.0)
+    reg.register("norm", "xla", lambda x: x + 0.0)
+
+    def pallas_like(x):
+        raise NotImplementedError("pallas lowering requires a TPU backend")
+
+    reg.register("norm", "pallas", pallas_like)
+    return reg
+
+
+def _toy_space(reg):
+    return BindingSpace(
+        lambda: (lambda x: reg.call("norm", x)), registry=reg, tag="toy"
+    )
+
+
+def test_probe_trace_rejects_untraceable_binding():
+    space = _toy_space(_toy_registry())
+    report = check_binding_space(
+        space, (jnp.ones((4, 4)),), constraints={}, program="toy"
+    )
+    verdicts = {(v.block, v.target): v.status for v in report.verdicts}
+    assert verdicts[("norm", "xla")] == "legal"
+    assert verdicts[("norm", "pallas")] == "illegal"
+    (reason,) = [v.reason for v in report.verdicts if v.target == "pallas"]
+    assert "probe trace failed" in reason
+
+
+def test_platform_metadata_rejects_without_probe():
+    from repro.analysis.legality import TargetConstraints
+
+    space = _toy_space(_toy_registry())
+    constraints = {
+        ("norm", "pallas"): TargetConstraints(requires_platform=("tpu",)),
+        ("norm", "xla"): TargetConstraints(),
+    }
+    report = check_binding_space(
+        space, (jnp.ones((4, 4)),), constraints=constraints, platform="cpu",
+        probe_trace=False, program="toy",
+    )
+    illegal = report.illegal
+    assert ("norm", "pallas") in illegal
+    assert "requires platform tpu" in illegal[("norm", "pallas")]
+    # platform-dependent verdicts are info: exempt from the ratchet
+    diags = report.diagnostics()
+    assert all(d.severity == "info" for d in diags
+               if d.subject == "norm->pallas")
+
+
+def test_kernel_shelf_declares_legality_metadata():
+    from repro.analysis.legality import shelf_constraints
+
+    meta = shelf_constraints()
+    assert ("matmul", "pallas") in meta
+    assert "tpu" in meta[("matmul", "pallas")].requires_platform
+    # the baseline formulations run anywhere
+    assert meta[("matmul", "ref")].requires_platform == ()
+
+
+def test_mark_illegal_prunes_candidates_but_never_baseline():
+    space = _toy_space(_toy_registry())
+    space.mark_illegal({("norm", "pallas"): "no TPU"})
+    bad = space.candidate_from_mapping({"norm": "pallas"})
+    good = space.candidate_from_mapping({"norm": "xla"})
+    assert "no TPU" in space.pruned(bad)
+    assert space.pruned(good) is None
+    assert space.pruned(space.baseline()) is None
+    from repro.core.planner.space import DEFAULT_TARGET
+
+    with pytest.raises(ValueError):
+        space.mark_illegal({("norm", DEFAULT_TARGET): "nope"})
+
+
+# -- legality pre-filter through a real search --------------------------------
+
+
+class FakeExecutor:
+    """Deterministic 'measurements' keyed on the candidate's binding; never
+    calls the built fn, so statically-illegal variants don't crash the
+    unpruned control search."""
+
+    name = "fake"
+
+    def __init__(self, times):
+        self.times = times
+        self.measured: list[dict] = []
+
+    def run(self, jobs, meter=None):
+        from repro.core.verify import Measurement
+
+        out = []
+        for job in jobs:
+            binding = job.space.binding_of(job.candidate)
+            target = binding.get("norm", "ref")
+            self.measured.append(binding)
+            out.append(Measurement(
+                seconds=self.times[target], compile_seconds=0.0, repeats=1
+            ))
+        return out
+
+
+TIMES = {"ref": 0.02, "xla": 0.001, "pallas": 5.0}
+
+
+def _searched_session(legality):
+    reg = _toy_registry()
+    session = OffloadSession(
+        _toy_space(reg),
+        args=(jnp.ones((4, 4)),),
+        strategy=SingleThenCombine(),
+        executor=FakeExecutor(TIMES),
+        repeats=1,
+        legality=legality,
+    )
+    session.analyze()
+    session.discover()
+    plan = session.plan()
+    return session, plan
+
+
+def test_pruned_search_commits_same_winner_as_unpruned():
+    pruned_session, pruned_plan = _searched_session(legality=True)
+    control_session, control_plan = _searched_session(legality=False)
+
+    # the pre-filter found the untraceable pallas binding and skipped it
+    report = pruned_session._report
+    assert report.pruned > 0
+    assert any("pallas" in k for k in report.pruned_reasons)
+    fake = pruned_session.cache.executor
+    assert all(b.get("norm") != "pallas" for b in fake.measured)
+
+    # the control search measured (and rejected on merit) the 5 s pallas
+    control_fake = control_session.cache.executor
+    assert any(b.get("norm") == "pallas" for b in control_fake.measured)
+    assert getattr(control_session._report, "pruned", 0) == 0
+
+    # identical committed winner: pruning changed cost, not the outcome
+    assert pruned_plan.mapping == control_plan.mapping == {"norm": "xla"}
+    assert pruned_session.legality_report is not None
+    assert control_session.legality_report is None
+
+
+# -- full-zoo lint vs the checked-in baseline ---------------------------------
+
+
+def _zoo_cells():
+    from repro.configs import ARCH_NAMES
+
+    return [(a, k) for a in ARCH_NAMES for k in ("prefill", "decode")]
+
+
+@pytest.mark.parametrize("arch,kind", _zoo_cells())
+def test_zoo_cell_lints_clean_against_baseline(arch, kind):
+    """Every configs-zoo (arch, phase) program runs the legality pass over
+    its full BindingSpace plus the static hot-path lints, and must produce
+    nothing above the committed baseline (info verdicts are host-dependent
+    and exempt)."""
+    from repro.analysis.lint import lint_zoo_cell
+
+    report = AnalysisReport(lint_zoo_cell(arch, kind))
+    baseline = Baseline.load(BASELINE_PATH)
+    new = report.new_versus(baseline)
+    assert new == [], "\n".join(str(d) for d in new)
+
+
+def test_serve_engine_lints_clean_and_validated():
+    """A tiny paged engine serves a short trace under runtime page-table
+    validation, then its hot-path + page-table lints must be clean — the
+    PR-4/5 contracts (decode transfers token ids only, recomposition never
+    retraces, no page aliasing) hold for real served traffic."""
+    from repro.configs import get_config
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_config("llama3.2-1b").reduced()
+    engine = ServeEngine(
+        cfg, n_slots=2, max_len=32, page_size=8, kv_validate=True, seed=0
+    )
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        prompt = rng.integers(0, cfg.vocab_size, 5 + i).tolist()
+        engine.submit(Request(prompt, max_new_tokens=4))
+    completions = engine.run_until_idle(max_steps=64)
+    assert len(completions) == 3
+    assert engine.lint() == []
+    assert engine.programs.records["decode"].calls > 0

@@ -39,6 +39,59 @@ def test_scan_scales_dot_flops():
     assert rep.dot_flops == pytest.approx(2 * 8**3 * 5)
 
 
+def test_conv_flops_counted():
+    def f(x, k):
+        return jax.lax.conv_general_dilated(
+            x, k, window_strides=(1, 1), padding="SAME"
+        )
+
+    rep = ja.trace_report(
+        f,
+        jax.ShapeDtypeStruct((1, 3, 8, 8), jnp.float32),  # NCHW
+        jax.ShapeDtypeStruct((4, 3, 3, 3), jnp.float32),  # OIHW
+    )
+    # out (1,4,8,8): 256 elems; kernel 4*3*3*3 = 108 weights, 27 MACs per
+    # output element (108 / 4 output features)
+    assert rep.conv_flops == pytest.approx(2 * 256 * 27)
+    assert rep.flops >= rep.conv_flops
+    assert rep.dot_flops == 0.0
+
+
+def test_fft_flops_counted():
+    rep = ja.trace_report(
+        lambda x: jnp.fft.fft(x),
+        jax.ShapeDtypeStruct((4, 16), jnp.complex64),
+    )
+    # 5 N log2 N per transform, batch of 4 rows of N=16
+    assert rep.fft_flops == pytest.approx(5 * 4 * 16 * 4)
+    assert rep.flops >= rep.fft_flops
+
+
+def test_scan_scales_conv_flops():
+    def f(x, ks):
+        def body(c, k):
+            return jax.lax.conv_general_dilated(
+                c, k, window_strides=(1, 1), padding="SAME"
+            ), None
+
+        y, _ = jax.lax.scan(body, x, ks)
+        return y
+
+    once = ja.trace_report(
+        lambda x, k: jax.lax.conv_general_dilated(
+            x, k, window_strides=(1, 1), padding="SAME"
+        ),
+        jax.ShapeDtypeStruct((1, 3, 8, 8), jnp.float32),
+        jax.ShapeDtypeStruct((3, 3, 3, 3), jnp.float32),
+    )
+    scanned = ja.trace_report(
+        f,
+        jax.ShapeDtypeStruct((1, 3, 8, 8), jnp.float32),
+        jax.ShapeDtypeStruct((5, 3, 3, 3, 3), jnp.float32),
+    )
+    assert scanned.conv_flops == pytest.approx(5 * once.conv_flops)
+
+
 def test_histogram_similarity_detects_same_computation():
     """The jaxpr analogue of B-2: two differently-written FFT apps trace to
     near-identical primitive histograms; an unrelated computation does not."""
