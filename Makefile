@@ -37,6 +37,14 @@ serve-bench:
 serve-bench-paged:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --meter auto --page-size 16 --prefill-chunk 8 --json-out BENCH_serve_paged.json
 
+# Observability demo: run the fast serving trace with the lifecycle
+# tracer on, write trace-demo.json (loadable at ui.perfetto.dev) and a
+# Prometheus snapshot, then print the terminal span summary.
+.PHONY: trace-demo
+trace-demo:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --trace-out trace-demo.json --metrics-out trace-demo-metrics.txt
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) -m repro.obs.timeline trace-demo.json --check
+
 # Static analysis: legality + hot-path + paging passes over every zoo
 # (arch, phase) program and two tiny serve engines, ratcheted against the
 # checked-in analysis_baseline.json — CI fails only on NEW findings.

@@ -14,8 +14,12 @@ sustained-load throughput (tok/s), request latency and TTFT percentiles
 binds each phase to its committed zoo plan, so the benchmark measures the
 *deployed* offload pattern, not the default bindings.  ``--json-out PATH``
 additionally writes a machine-readable snapshot (``BENCH_serve.json``) with
-throughput, percentiles, energy provenance, per-phase telemetry, engine
-stats/metrics and the git revision, so successive runs diff cleanly.
+throughput, percentiles (including TTFT-from-admission and queue wait),
+energy provenance, per-phase telemetry, engine stats/metrics and the git
+revision, so successive runs diff cleanly.  ``--trace-out PATH`` turns the
+request-lifecycle tracer on and writes a Chrome/Perfetto trace of the
+measured run (``python -m repro.obs.timeline PATH`` summarises it);
+``--metrics-out PATH`` dumps the engine's Prometheus registry.
 """
 
 from __future__ import annotations
@@ -40,7 +44,9 @@ from repro.launch.serve import (  # noqa: E402
     format_kv_metrics,
     make_requests,
     percentile,
+    write_obs_outputs,
 )
+from repro.obs.timeline import span_summary  # noqa: E402
 from repro.serve import Request  # noqa: E402
 
 
@@ -84,6 +90,8 @@ def snapshot(engine, args, makespan, completions) -> dict:
     gen_tokens = sum(len(c.tokens) for c in completions)
     latencies = [c.latency for c in completions]
     ttfts = [c.ttft for c in completions]
+    ttfts_admitted = [c.ttft_admitted for c in completions]
+    queue_waits = [c.queue_wait for c in completions]
     phases = {}
     for phase in ("prefill", "decode"):
         t = engine.telemetry[phase]
@@ -103,8 +111,17 @@ def snapshot(engine, args, makespan, completions) -> dict:
                for p in ("prefill", "decode"))
         else None
     )
+    # prefill-vs-decode split of the metered phase time — where the
+    # engine's compute actually went, independent of queueing
+    phase_seconds = {
+        p: engine.telemetry[p].seconds for p in ("prefill", "decode")
+    }
+    total_phase = sum(phase_seconds.values())
+    spans = None
+    if engine.tracer.enabled and len(engine.tracer):
+        spans = span_summary(engine.tracer.to_chrome()["traceEvents"])
     return {
-        "schema": 1,
+        "schema": 2,
         "benchmark": "serve_load",
         "git_sha": git_sha(),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
@@ -143,6 +160,23 @@ def snapshot(engine, args, makespan, completions) -> dict:
             "p50": percentile(ttfts, 0.5) * 1e3,
             "p99": percentile(ttfts, 0.99) * 1e3,
         },
+        "ttft_admitted_ms": {
+            "p50": percentile(ttfts_admitted, 0.5) * 1e3,
+            "p99": percentile(ttfts_admitted, 0.99) * 1e3,
+        },
+        "queue_wait_ms": {
+            "p50": percentile(queue_waits, 0.5) * 1e3,
+            "p99": percentile(queue_waits, 0.99) * 1e3,
+        },
+        "preemptions": stats.preemptions,
+        "phase_split": {
+            "prefill_s": phase_seconds["prefill"],
+            "decode_s": phase_seconds["decode"],
+            "prefill_frac": (
+                phase_seconds["prefill"] / total_phase if total_phase else 0.0
+            ),
+        },
+        "spans": spans,
         "energy": {
             "joules": joules,
             "joules_per_token": (
@@ -209,6 +243,8 @@ def main() -> None:
     gen_tokens = sum(len(c.tokens) for c in completions)
     latencies = [c.latency for c in completions]
     ttfts = [c.ttft for c in completions]
+    ttfts_admitted = [c.ttft_admitted for c in completions]
+    queue_waits = [c.queue_wait for c in completions]
     decode = engine.telemetry["decode"]
     prefill = engine.telemetry["prefill"]
 
@@ -223,6 +259,13 @@ def main() -> None:
           f"p99 {percentile(latencies, 0.99)*1e3:.1f} ms")
     print(f"ttft:    p50 {percentile(ttfts, 0.5)*1e3:.1f} ms  "
           f"p99 {percentile(ttfts, 0.99)*1e3:.1f} ms")
+    # ttft includes the queue wait; the admitted variant isolates the
+    # model-side prefill latency from the scheduler's queueing
+    print(f"ttft from admit: "
+          f"p50 {percentile(ttfts_admitted, 0.5)*1e3:.1f} ms  "
+          f"p99 {percentile(ttfts_admitted, 0.99)*1e3:.1f} ms  "
+          f"(queue wait p50 {percentile(queue_waits, 0.5)*1e3:.1f} ms  "
+          f"p99 {percentile(queue_waits, 0.99)*1e3:.1f} ms)")
     joules = (
         (prefill.joules or 0.0) + (decode.joules or 0.0)
         if (prefill.joules is not None or decode.joules is not None)
@@ -239,6 +282,7 @@ def main() -> None:
           f"{stats.steps} engine steps")
     print(format_kv_metrics(engine))
 
+    write_obs_outputs(engine, args)
     if args.json_out:
         record = snapshot(engine, args, makespan, completions)
         with open(args.json_out, "w") as f:

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from typing import Any, Callable, Sequence
 
 import jax
@@ -81,10 +82,22 @@ class ProgramRecord:
     loop: bool = False  # called once per engine step (the decode loop)
     carry_outputs: tuple[int, ...] = ()  # top-level outputs that stay on device
     expected_signatures: int | None = None  # None = unbounded (e.g. prefill)
+    #: trace-span kind covering this program's calls (None = the engine
+    #: never span-instruments it — the obs info lint flags that)
+    span_kind: str | None = None
     signatures: dict[tuple, tuple] = dataclasses.field(default_factory=dict)
     calls: int = 0
+    #: wall seconds spent in the first call of each distinct signature —
+    #: trace+compile+dispatch, the retrace cost the timeline should show
+    compile_seconds: float = 0.0
 
-    def observe(self, args: tuple) -> None:
+    @property
+    def retraces(self) -> int:
+        """Signatures beyond the first — each one recompiled the program."""
+        return max(len(self.signatures) - 1, 0)
+
+    def observe(self, args: tuple) -> bool:
+        """Record one call; True when its abstract signature is new."""
         self.calls += 1
         leaves = jax.tree_util.tree_leaves(args)
         sig = tuple(_leaf_signature(leaf) for leaf in leaves)
@@ -94,6 +107,8 @@ class ProgramRecord:
             self.signatures[sig] = jax.tree_util.tree_map(
                 _leaf_struct, args
             )
+            return True
+        return False
 
 
 class ProgramSet:
@@ -107,6 +122,13 @@ class ProgramSet:
         self.records: dict[str, ProgramRecord] = {}
         self.sync_bytes = sync_bytes
         self.const_bytes = const_bytes
+        #: optional ``repro.obs`` attachments (set by the engine): a
+        #: Tracer that receives a "compile" span per new signature, and a
+        #: MetricsRegistry that carries per-program retrace/compile-time
+        #: counters.  Both default off — a bare ProgramSet stays analysis-
+        #: only with zero obs coupling.
+        self.tracer: Any = None
+        self.metrics: Any = None
 
     def register(
         self,
@@ -115,25 +137,75 @@ class ProgramSet:
         loop: bool = False,
         carry_outputs: Sequence[int] = (),
         expected_signatures: int | None = None,
+        span_kind: str | None = None,
     ) -> Callable[..., Any]:
-        """Wrap ``fn`` so calls record their abstract signature.  Returns
-        the wrapper the caller should invoke instead of ``fn``."""
+        """Wrap ``fn`` so calls record their abstract signature (and the
+        first-call wall time of each new signature — the compile cost).
+        Returns the wrapper the caller should invoke instead of ``fn``."""
         rec = ProgramRecord(
             name=name,
             fn=fn,
             loop=loop,
             carry_outputs=tuple(carry_outputs),
             expected_signatures=expected_signatures,
+            span_kind=span_kind,
         )
         self.records[name] = rec
 
         @functools.wraps(fn)
         def observed(*args: Any, **kwargs: Any) -> Any:
-            rec.observe(args if not kwargs else args + tuple(kwargs.values()))
-            return fn(*args, **kwargs)
+            new_sig = rec.observe(
+                args if not kwargs else args + tuple(kwargs.values())
+            )
+            if not new_sig:
+                return fn(*args, **kwargs)
+            # first call under this signature: jit traces + compiles
+            # synchronously inside the call, so its wall time is the
+            # retrace cost (execution itself dispatches async)
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            dt = time.perf_counter() - t0
+            rec.compile_seconds += dt
+            self._on_compile(rec, t0, dt)
+            return out
 
         observed.record = rec  # type: ignore[attr-defined]
         return observed
+
+    def _on_compile(self, rec: ProgramRecord, t0: float, dt: float) -> None:
+        tracer = self.tracer
+        if tracer is not None and tracer.enabled:
+            tracer.add_span(
+                "compile", t0, t0 + dt,
+                program=rec.name, signature=len(rec.signatures),
+            )
+        if self.metrics is not None:
+            self.metrics.counter(
+                "serve_program_retraces_total",
+                "distinct abstract signatures per program beyond the first",
+                labelnames=("program",),
+            ).labels(program=rec.name).inc(0 if len(rec.signatures) == 1
+                                           else 1)
+            self.metrics.counter(
+                "serve_program_compile_seconds_total",
+                "wall seconds spent in first-call-per-signature "
+                "(trace + compile)",
+                labelnames=("program",),
+            ).labels(program=rec.name).inc(dt)
+
+    def stats(self) -> dict[str, dict[str, Any]]:
+        """Per-program compile/retrace counters for reports and the
+        metrics endpoint."""
+        return {
+            name: {
+                "calls": rec.calls,
+                "signatures": len(rec.signatures),
+                "retraces": rec.retraces,
+                "compile_seconds": rec.compile_seconds,
+                "span_kind": rec.span_kind,
+            }
+            for name, rec in self.records.items()
+        }
 
     def observe(self, name: str, *args: Any) -> None:
         """Record a signature without wrapping (tests, ad-hoc programs)."""
@@ -153,6 +225,18 @@ class ProgramSet:
         diags: list[Diagnostic] = []
         if not rec.signatures:
             return diags  # never called — nothing observed to lint
+
+        if self.tracer is not None and rec.span_kind is None:
+            # the engine attached a tracer but this program's calls carry
+            # no span kind: its time is invisible in the exported timeline
+            diags.append(Diagnostic(
+                pass_name="hotpath", code="no-span", severity="info",
+                program=rec.name, subject="span-instrumentation",
+                message=(
+                    "program is registered with a traced engine but has no "
+                    "span_kind — its calls won't appear in obs timelines"
+                ),
+            ))
 
         if (
             rec.expected_signatures is not None

@@ -65,7 +65,9 @@ def args_fingerprint(args: Sequence[Any]) -> tuple:
 
 
 class MeasurementCache:
-    def __init__(self, meter: Any = None, executor: Any = None) -> None:
+    def __init__(
+        self, meter: Any = None, executor: Any = None, metrics: Any = None
+    ) -> None:
         """``meter``: optional ``objectives.PowerMeter`` whose begin/end
         hooks bracket every new measurement; the joules it reports are
         stored on the measurement (and replayed on cache hits) so
@@ -78,17 +80,58 @@ class MeasurementCache:
 
         ``executor``: optional ``repro.metering`` executor (instance or
         name) that runs the timed work; defaults to serial measurement.
+
+        ``metrics``: optional ``repro.obs.MetricsRegistry`` — hit/miss
+        accounting writes through to ``planner_cache_{hits,misses}_total``
+        (same increment that feeds ``self.hits``/``self.misses``, so the
+        exported counters can never drift from the legacy fields).
         """
         self._data: dict[tuple, CacheRecord] = {}
         self.meter = meter
         self._executor = None
         if executor is not None:
             self.executor = executor
+        # counters must exist before the hits/misses property setters run
+        self._hits_c = self._misses_c = None
+        if metrics is not None:
+            self._hits_c = metrics.counter(
+                "planner_cache_hits_total",
+                "measurements replayed from the shared cache",
+            )
+            self._misses_c = metrics.counter(
+                "planner_cache_misses_total",
+                "measurements actually taken (compile+run trials)",
+            )
         self.hits = 0
         self.misses = 0
         self._seq = 0
         self._lock = threading.Lock()
         self._inflight: dict[tuple, threading.Event] = {}
+
+    # hit/miss accounting: plain-looking counters whose setters forward
+    # positive deltas to the registry, so every `self.hits += 1` site —
+    # present and future — feeds the exported metric automatically
+    @property
+    def hits(self) -> int:
+        return self._hits
+
+    @hits.setter
+    def hits(self, value: int) -> None:
+        delta = value - getattr(self, "_hits", 0)
+        if delta > 0 and self._hits_c is not None:
+            self._hits_c.inc(delta)
+        self._hits = value
+
+    @property
+    def misses(self) -> int:
+        return self._misses
+
+    @misses.setter
+    def misses(self, value: int) -> None:
+        delta = value - getattr(self, "_misses", 0)
+        if delta > 0 and self._misses_c is not None:
+            self._misses_c.inc(delta)
+        self._misses = value
 
     @property
     def executor(self) -> Any:

@@ -26,6 +26,7 @@ import argparse
 import numpy as np
 
 from repro.configs import get_config
+from repro.obs import Tracer
 from repro.serve import Request, Sampler, ServeEngine
 
 
@@ -83,6 +84,10 @@ def build_engine(args: argparse.Namespace) -> ServeEngine:
             executor=args.executor,
             meter=args.meter,
         )
+    # --trace-out turns the request-lifecycle tracer on for this engine;
+    # without it the engine inherits the (disabled) process tracer and
+    # tracing costs one attribute check per hot-path site
+    tracer = Tracer() if getattr(args, "trace_out", None) else None
     return ServeEngine(
         cfg,
         n_slots=args.slots,
@@ -97,9 +102,25 @@ def build_engine(args: argparse.Namespace) -> ServeEngine:
         page_size=args.page_size,
         n_pages=args.n_pages,
         kv_validate=args.kv_validate,
+        tracer=tracer,
         seed=args.seed,
         quiet=False,
     )
+
+
+def write_obs_outputs(engine: ServeEngine, args: argparse.Namespace) -> None:
+    """Write the observability artifacts the CLI asked for: a Chrome/
+    Perfetto trace (``--trace-out``, loadable at ui.perfetto.dev) and a
+    Prometheus text snapshot of the engine registry (``--metrics-out``)."""
+    if getattr(args, "trace_out", None):
+        engine.tracer.write_chrome(args.trace_out)
+        print(f"trace written: {args.trace_out} "
+              f"({len(engine.tracer)} records; inspect with "
+              f"python -m repro.obs.timeline {args.trace_out})")
+    if getattr(args, "metrics_out", None):
+        with open(args.metrics_out, "w") as f:
+            f.write(engine.registry.render_prometheus())
+        print(f"metrics written: {args.metrics_out}")
 
 
 def make_requests(
@@ -173,6 +194,13 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--meter", default="none",
                     help="power telemetry: none | auto | time | nvml | "
                          "rapl | psutil | tpu")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable request-lifecycle tracing and write a "
+                         "Chrome/Perfetto trace_event JSON here (inspect "
+                         "with ui.perfetto.dev or repro.obs.timeline)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a Prometheus text snapshot of the engine "
+                         "metrics registry here after the run")
 
 
 def main() -> None:
@@ -204,11 +232,21 @@ def main() -> None:
         print(engine.telemetry[phase].summary())
     latencies = [c.latency for c in completions]
     ttfts = [c.ttft for c in completions]
+    ttfts_admitted = [c.ttft_admitted for c in completions]
+    queue_waits = [c.queue_wait for c in completions]
     print(
         f"latency: p50 {percentile(latencies, 0.5)*1e3:.1f} ms "
         f"p99 {percentile(latencies, 0.99)*1e3:.1f} ms | "
         f"ttft: p50 {percentile(ttfts, 0.5)*1e3:.1f} ms "
         f"p99 {percentile(ttfts, 0.99)*1e3:.1f} ms"
+    )
+    # ttft folds the scheduler's queue wait in; the admitted variant is
+    # the model-side prefill latency with that wait subtracted out
+    print(
+        f"ttft from admit: p50 {percentile(ttfts_admitted, 0.5)*1e3:.1f} ms "
+        f"p99 {percentile(ttfts_admitted, 0.99)*1e3:.1f} ms | "
+        f"queue wait: p50 {percentile(queue_waits, 0.5)*1e3:.1f} ms "
+        f"p99 {percentile(queue_waits, 0.99)*1e3:.1f} ms"
     )
     print(
         f"continuous batching: {stats.slot_reuses} slot reuses, "
@@ -219,6 +257,7 @@ def main() -> None:
     sample = completions[0]
     print(f"sample (request {sample.request_id}):",
           np.asarray(sample.tokens[:16]))
+    write_obs_outputs(engine, args)
 
 
 if __name__ == "__main__":

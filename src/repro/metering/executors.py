@@ -37,6 +37,15 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Protocol, Sequence, runtime_checkable
 
 from repro.core import verify
+from repro.obs import get_tracer
+
+
+def _trial_args(job: MeasureJob) -> dict:
+    """Span attributes for one measured trial (built only when tracing)."""
+    out: dict[str, Any] = {"repeats": job.repeats, "warmup": job.warmup}
+    if job.candidate is not None:
+        out["candidate"] = str(job.candidate)[:120]
+    return out
 
 
 @dataclasses.dataclass
@@ -92,29 +101,43 @@ def meter_lock(meter: Any) -> threading.Lock | None:
 
 def run_job(job: MeasureJob, meter: Any = None) -> verify.Measurement:
     """Measure one job with the meter's begin/end bracketing the timed
-    window; exclusive meters are serialised via their per-meter lock."""
-    if meter is None:
-        return verify.measure(
-            job.fn,
-            job.args,
-            repeats=job.repeats,
-            warmup=job.warmup,
-            min_seconds=job.min_seconds,
-        )
-    lock = meter_lock(meter)
-    with lock if lock is not None else contextlib.nullcontext():
-        meter.begin()
-        m = verify.measure(
-            job.fn,
-            job.args,
-            repeats=job.repeats,
-            warmup=job.warmup,
-            min_seconds=job.min_seconds,
-        )
-        m.energy_joules = meter.end(m, space=job.space, candidate=job.candidate)
-    if m.energy_joules is not None:
-        m.energy_provenance = getattr(meter, "provenance", None)
-    return m
+    window; exclusive meters are serialised via their per-meter lock.
+
+    Each job runs under a "trial" span on the process tracer (a no-op
+    unless someone enabled it) — with ``DeviceParallelExecutor`` the spans
+    land on each worker thread's own track, so the exported timeline shows
+    the measurement overlap directly."""
+    tracer = get_tracer()
+    span = (
+        tracer.span("trial", **_trial_args(job))
+        if tracer.enabled
+        else contextlib.nullcontext()
+    )
+    with span:
+        if meter is None:
+            return verify.measure(
+                job.fn,
+                job.args,
+                repeats=job.repeats,
+                warmup=job.warmup,
+                min_seconds=job.min_seconds,
+            )
+        lock = meter_lock(meter)
+        with lock if lock is not None else contextlib.nullcontext():
+            meter.begin()
+            m = verify.measure(
+                job.fn,
+                job.args,
+                repeats=job.repeats,
+                warmup=job.warmup,
+                min_seconds=job.min_seconds,
+            )
+            m.energy_joules = meter.end(
+                m, space=job.space, candidate=job.candidate
+            )
+        if m.energy_joules is not None:
+            m.energy_provenance = getattr(meter, "provenance", None)
+        return m
 
 
 class SerialExecutor:
@@ -245,6 +268,18 @@ class BatchedExecutor:
     ) -> list[verify.Measurement]:
         if not group:
             return []
+        tracer = get_tracer()
+        span = (
+            tracer.span("trial-group", fused=len(group))
+            if tracer.enabled
+            else contextlib.nullcontext()
+        )
+        with span:
+            return self._run_group_timed(group, meter)
+
+    def _run_group_timed(
+        self, group: Sequence[MeasureJob], meter: Any = None
+    ) -> list[verify.Measurement]:
         perf = time.perf_counter
         warm: list[float] = []
         for job in group:

@@ -1,0 +1,37 @@
+"""``repro.obs`` — tracing, metrics and profiling across the stack.
+
+The paper's environment-adaptive loop re-decides *where* to offload from
+measurements of the running system.  This package is the measurement
+substrate those decisions (and their operators) consume:
+
+  trace     :class:`Tracer` — typed spans/events on a thread-safe ring
+            buffer; Chrome/Perfetto ``trace_event`` JSON and JSONL
+            exporters.  The serve engine, the offload session stages and
+            the metering executors all record against the process-default
+            tracer (:func:`get_tracer`), disabled — and near-free — until
+            enabled.
+  metrics   :class:`MetricsRegistry` — counter/gauge/exponential-bucket
+            histogram families with a Prometheus text renderer and an
+            optional stdlib HTTP ``/metrics`` endpoint
+            (:class:`MetricsServer`; ``ServeEngine.serve_metrics(port)``).
+  profile   :func:`profile_window` — opt-in ``jax.profiler`` capture
+            around N serve steps or one planner round, degrading to a
+            no-op where the profiler is unavailable.
+  timeline  ``python -m repro.obs.timeline trace.json`` — terminal span
+            summary (p50/p99 per span kind) plus the critical path of the
+            worst request.
+"""
+
+from repro.obs.metrics import (  # noqa: F401
+    MetricsRegistry,
+    MetricsServer,
+    exponential_buckets,
+)
+from repro.obs.profile import profile_window, profiler_available  # noqa: F401
+from repro.obs.trace import (  # noqa: F401
+    NULL_SPAN,
+    SpanRecord,
+    Tracer,
+    get_tracer,
+    set_tracer,
+)

@@ -170,8 +170,13 @@ class OffloadSession:
         rtol: float = 1e-3,
         force_search: bool = False,
         legality: bool = False,
+        tracer: Any = None,
     ) -> None:
         self.target = target
+        #: ``repro.obs.Tracer`` carrying one "stage:<name>" span per
+        #: lifecycle stage (defaults to the process tracer, disabled
+        #: unless someone turned it on)
+        self.tracer = tracer
         self.args = tuple(args)
         self.objective = resolve_objective(objective)
         self.strategy = strategy or SingleThenCombine()
@@ -258,6 +263,16 @@ class OffloadSession:
         cache.executor = executor
 
     # -- stage machinery -------------------------------------------------------
+    def _stage_span(self, stage: str, **args: Any):
+        """Context manager spanning one lifecycle stage on the session's
+        tracer (or the process tracer) — no-op when tracing is off."""
+        from repro.obs import get_tracer
+
+        tracer = self.tracer if self.tracer is not None else get_tracer()
+        if not tracer.enabled:
+            return contextlib.nullcontext()
+        return tracer.span(f"stage:{stage}", mode=self.mode, **args)
+
     def _require(self, stage: str, prerequisite: str) -> None:
         if prerequisite not in self._done:
             raise StageError(
@@ -282,21 +297,22 @@ class OffloadSession:
         via the engine.  Space/binding modes: the axis structure — every
         searchable position and its registered choices.
         """
-        if self.mode == "app":
-            self._analysis = self._get_engine().analyze(self.target)
-        elif self.mode == "binding":
-            space = BindingSpace(
-                self.target,
-                blocks=self._blocks,
-                registry=self.registry,
-            ) if self._patterns is None else BindingSpace.from_patterns(
-                self.target, self._patterns, registry=self.registry
-            )
-            self._space = space
-            self._analysis = {a.name: a.choices for a in space.axes}
-        else:  # space
-            self._analysis = {a.name: a.choices for a in self.space.axes}
-        self._done.add("analyze")
+        with self._stage_span("analyze"):
+            if self.mode == "app":
+                self._analysis = self._get_engine().analyze(self.target)
+            elif self.mode == "binding":
+                space = BindingSpace(
+                    self.target,
+                    blocks=self._blocks,
+                    registry=self.registry,
+                ) if self._patterns is None else BindingSpace.from_patterns(
+                    self.target, self._patterns, registry=self.registry
+                )
+                self._space = space
+                self._analysis = {a.name: a.choices for a in space.axes}
+            else:  # space
+                self._analysis = {a.name: a.choices for a in self.space.axes}
+            self._done.add("analyze")
         return self._analysis
 
     def _get_engine(self) -> Any:
@@ -322,23 +338,26 @@ class OffloadSession:
         paper's static pre-filter, run before any timing is spent.
         """
         self._require("discover", "analyze")
-        if self.mode == "app":
-            prepared = self._get_engine().prepare(
-                self.target, self.args, report=self._analysis
-            )
-            self._space = prepared.space
-            self._discoveries = prepared.discoveries
-            self._skipped = prepared.skipped
-            found: list[Any] = prepared.discoveries
-        else:
-            found = [a.name for a in self.space.axes if len(a.choices) > 1]
-        if self.legality and isinstance(self._space, BindingSpace):
-            from repro.analysis.legality import check_binding_space
+        with self._stage_span("discover"):
+            if self.mode == "app":
+                prepared = self._get_engine().prepare(
+                    self.target, self.args, report=self._analysis
+                )
+                self._space = prepared.space
+                self._discoveries = prepared.discoveries
+                self._skipped = prepared.skipped
+                found: list[Any] = prepared.discoveries
+            else:
+                found = [
+                    a.name for a in self.space.axes if len(a.choices) > 1
+                ]
+            if self.legality and isinstance(self._space, BindingSpace):
+                from repro.analysis.legality import check_binding_space
 
-            report = check_binding_space(self._space, self.args)
-            self._space.mark_illegal(report.illegal)
-            self.legality_report = report
-        self._done.add("discover")
+                report = check_binding_space(self._space, self.args)
+                self._space.mark_illegal(report.illegal)
+                self.legality_report = report
+            self._done.add("discover")
         return found
 
     # -- Step 3 ----------------------------------------------------------------
@@ -362,23 +381,24 @@ class OffloadSession:
                 self.cache.executor = executor
             else:
                 self._set_cache_executor(self.cache, executor)
-        planner = Planner(
-            self.space,
-            strategy=self.strategy,
-            cache=self.cache,
-            store=self.store,
-            objective=self.objective,
-        )
-        self._plan, self._report = planner.plan(
-            self.args,
-            key=self.key,
-            repeats=self.repeats,
-            min_seconds=self.min_seconds,
-            force_search=self.force_search,
-            save=False,  # the commit stage persists
-        )
-        self._from_store = self._report is None
-        self._done.add("plan")
+        with self._stage_span("plan", key=self.key):
+            planner = Planner(
+                self.space,
+                strategy=self.strategy,
+                cache=self.cache,
+                store=self.store,
+                objective=self.objective,
+            )
+            self._plan, self._report = planner.plan(
+                self.args,
+                key=self.key,
+                repeats=self.repeats,
+                min_seconds=self.min_seconds,
+                force_search=self.force_search,
+                save=False,  # the commit stage persists
+            )
+            self._from_store = self._report is None
+            self._done.add("plan")
         return self._plan
 
     # -- verification ----------------------------------------------------------
@@ -388,18 +408,20 @@ class OffloadSession:
         self._require("verify", "plan")
         plan = self._plan
         assert plan is not None
-        if not plan.mapping:  # winner is the baseline: trivially faithful
-            self._numerics_ok = True
-        else:
-            best_fn = self._winning_fn()
-            if self.mode == "app":
-                reference: Callable[..., Any] = self.target  # type: ignore[assignment]
+        with self._stage_span("verify"):
+            if not plan.mapping:  # winner is baseline: trivially faithful
+                self._numerics_ok = True
             else:
-                reference = self.space.build(self.space.baseline())
-            self._numerics_ok = verify_mod.verify_numerics(
-                reference, best_fn, self.args, rtol=self.rtol, atol=self.rtol
-            )
-        self._done.add("verify")
+                best_fn = self._winning_fn()
+                if self.mode == "app":
+                    reference: Callable[..., Any] = self.target  # type: ignore[assignment]
+                else:
+                    reference = self.space.build(self.space.baseline())
+                self._numerics_ok = verify_mod.verify_numerics(
+                    reference, best_fn, self.args,
+                    rtol=self.rtol, atol=self.rtol,
+                )
+            self._done.add("verify")
         return bool(self._numerics_ok)
 
     def _winning_fn(self) -> Callable[..., Any]:
@@ -424,21 +446,22 @@ class OffloadSession:
         self._require("commit", "plan")
         plan = self._plan
         assert plan is not None
-        if (
-            self.store is not None
-            and self.key is not None
-            and not self._from_store
-            and self._numerics_ok is not False
-        ):
-            self.store.save(plan)
-        fn: Callable[..., Any] | None
-        if not build:
-            fn = None
-        elif plan.mapping or self.mode != "app":
-            fn = self._winning_fn()
-        else:
-            fn = self.target  # type: ignore[assignment]
-        self._done.add("commit")
+        with self._stage_span("commit", key=self.key):
+            if (
+                self.store is not None
+                and self.key is not None
+                and not self._from_store
+                and self._numerics_ok is not False
+            ):
+                self.store.save(plan)
+            fn: Callable[..., Any] | None
+            if not build:
+                fn = None
+            elif plan.mapping or self.mode != "app":
+                fn = self._winning_fn()
+            else:
+                fn = self.target  # type: ignore[assignment]
+            self._done.add("commit")
         return OffloadResult(
             plan=plan,
             report=self._report,

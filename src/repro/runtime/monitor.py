@@ -26,17 +26,25 @@ class StragglerEvent:
 
 
 class StepMonitor:
+    """``histogram`` (optional) is a write-through bridge into a
+    ``repro.obs.MetricsRegistry`` instrument: every observed step duration
+    is also recorded there (``.observe(seconds)``), so the monitor's
+    rolling window and the exported latency histogram are fed by the same
+    observation — the numbers are never computed twice."""
+
     def __init__(
         self,
         window: int = 32,
         threshold: float = 2.0,
         patience: int = 3,
         on_straggler: Callable[[StragglerEvent], None] | None = None,
+        histogram=None,
     ) -> None:
         self.window: deque[float] = deque(maxlen=window)
         self.threshold = threshold
         self.patience = patience
         self.on_straggler = on_straggler
+        self.histogram = histogram
         self.events: list[StragglerEvent] = []
         self._consecutive: dict[int, int] = {}
         self.flagged_hosts: set[int] = set()
@@ -57,6 +65,8 @@ class StepMonitor:
     def observe(self, step: int, seconds: float, host: int = 0) -> None:
         self.steps += 1
         self.total_time += seconds
+        if self.histogram is not None:
+            self.histogram.observe(seconds)
         med = statistics.median(self.window) if self.window else seconds
         self.window.append(seconds)
         if len(self.window) >= 8 and seconds > self.threshold * med:

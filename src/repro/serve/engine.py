@@ -65,19 +65,29 @@ from repro.metering import meter_window, resolve_meter
 from repro.metering.meters import WindowTelemetry
 from repro.models import lm
 from repro.models.attention import cache_seq_axes, insert_pages
+from repro.obs import MetricsRegistry, Tracer, get_tracer
 from repro.offload import stored_binding
 from repro.runtime.monitor import StepMonitor
 from repro.serve.kv import PagePool, PageTable, PoolExhausted, pages_for
 from repro.serve.request import Completion, Request, RequestState, Token
 from repro.serve.sampler import Sampler, sample_tokens
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import Scheduler, request_track
 
 PHASES = ("prefill", "decode")
 
 
 @dataclasses.dataclass
 class PhaseTelemetry:
-    """Aggregate of every ``meter_window`` a phase ran under."""
+    """Aggregate of every ``meter_window`` a phase ran under.
+
+    With a ``registry`` (a :class:`repro.obs.MetricsRegistry`) attached,
+    every :meth:`add` *also* writes through to the
+    ``serve_phase_{calls,seconds,tokens,joules}_total{phase=...}``
+    counters — one observation feeds both views, so the legacy aggregate
+    and the exported metrics can never disagree.  The dataclass fields
+    remain the compatibility surface; new consumers should read the
+    registry.
+    """
 
     phase: str
     calls: int = 0
@@ -85,6 +95,33 @@ class PhaseTelemetry:
     tokens: int = 0
     joules: float | None = None
     provenance: str | None = None
+    registry: Any = dataclasses.field(
+        default=None, repr=False, compare=False
+    )
+
+    def __post_init__(self) -> None:
+        self._counters = None
+        if self.registry is not None:
+            lab = {"phase": self.phase}
+            reg = self.registry
+            self._counters = (
+                reg.counter(
+                    "serve_phase_calls_total",
+                    "phase program invocations", ("phase",),
+                ).labels(**lab),
+                reg.counter(
+                    "serve_phase_seconds_total",
+                    "wall seconds inside phase programs", ("phase",),
+                ).labels(**lab),
+                reg.counter(
+                    "serve_phase_tokens_total",
+                    "tokens processed per phase", ("phase",),
+                ).labels(**lab),
+                reg.counter(
+                    "serve_phase_joules_total",
+                    "metered energy per phase", ("phase",),
+                ).labels(**lab),
+            )
 
     def add(self, tele: WindowTelemetry, tokens: int) -> None:
         self.calls += 1
@@ -93,6 +130,13 @@ class PhaseTelemetry:
         if tele.joules is not None:
             self.joules = (self.joules or 0.0) + tele.joules
             self.provenance = tele.provenance
+        if self._counters is not None:
+            calls_c, seconds_c, tokens_c, joules_c = self._counters
+            calls_c.inc()
+            seconds_c.inc(max(tele.seconds, 0.0))
+            tokens_c.inc(tokens)
+            if tele.joules is not None:
+                joules_c.inc(max(tele.joules, 0.0))
 
     @property
     def tokens_per_second(self) -> float:
@@ -194,6 +238,8 @@ class ServeEngine:
         n_pages: int | None = None,
         kv_validate: bool = False,
         monitor: StepMonitor | None = None,
+        tracer: Tracer | None = None,
+        registry: MetricsRegistry | None = None,
         seed: int = 0,
         quiet: bool = True,
     ) -> None:
@@ -229,7 +275,43 @@ class ServeEngine:
         self.quiet = quiet
         self.prefill_bucket = prefill_bucket
         self.prefill_chunk = prefill_chunk
+
+        # -- observability -------------------------------------------------
+        # tracer: request-lifecycle spans (defaults to the process tracer,
+        # a disabled no-op unless someone enabled it); registry: the
+        # metric families every telemetry write-through lands in
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._queue_depth_g = self.registry.gauge(
+            "serve_queue_depth", "requests waiting for a slot"
+        )
+        self._active_slots_g = self.registry.gauge(
+            "serve_active_slots", "requests resident in KV slots"
+        )
+        self._kv_util_g = self.registry.gauge(
+            "serve_kv_utilization_pct", "KV pool/slot utilization"
+        )
+        self._kv_stranded_g = self.registry.gauge(
+            "serve_kv_stranded_pct", "reserved-but-unused KV capacity"
+        )
+        self._kv_frag_g = self.registry.gauge(
+            "serve_kv_fragmentation_pct", "partial-page fragmentation"
+        )
+        self._submitted_c = self.registry.counter(
+            "serve_requests_submitted_total", "requests accepted by submit()"
+        )
+        self._completed_c = self.registry.counter(
+            "serve_requests_completed_total", "requests finished"
+        )
+        self._generated_c = self.registry.counter(
+            "serve_tokens_generated_total", "tokens sampled across requests"
+        )
+        self._step_hist = self.registry.histogram(
+            "serve_step_seconds", "fused decode step latency"
+        )
         self.monitor = monitor or StepMonitor()
+        if self.monitor.histogram is None:
+            self.monitor.histogram = self._step_hist
 
         # -- KV memory subsystem ------------------------------------------
         self.paged = page_size is not None
@@ -262,6 +344,8 @@ class ServeEngine:
             prompt_cost=self._admission_cost,
             kv=self.kv,
             admit_tokens=self._admission_tokens,
+            tracer=self.tracer,
+            metrics=self.registry,
         )
 
         self.params = (
@@ -312,15 +396,22 @@ class ServeEngine:
         from repro.analysis.hotpath import ProgramSet
 
         self.programs = ProgramSet()
+        # the ProgramSet shares the engine's obs attachments: new-signature
+        # calls emit "compile" spans and feed the retrace counters, and the
+        # hot-path lint can flag any program left without a span_kind
+        self.programs.tracer = self.tracer
+        self.programs.metrics = self.registry
         self._prefill_fn = self.programs.register(
             "prefill", jax.jit(self._build_prefill()),
             carry_outputs=(1,),  # the b1 cache goes to insert, not to host
+            span_kind="prefill",
         )
         self._decode_fn = self.programs.register(
             "decode", jax.jit(self._build_decode(), donate_argnums=(2,)),
             loop=True,
             carry_outputs=(1,),  # the donated successor cache stays on device
             expected_signatures=1,  # recomposing the batch must not retrace
+            span_kind="decode",
         )
         self._insert_fn = self.programs.register(
             "insert",
@@ -330,15 +421,18 @@ class ServeEngine:
             ),
             carry_outputs=(0,),  # the whole output is the engine cache
             expected_signatures=1,  # slot recomposition must not retrace
+            span_kind="prefill",  # insert runs inside the prefill span
         )
         self._extend_fn = self.programs.register(
             "extend", jax.jit(self._build_extend(), donate_argnums=(2,)),
             carry_outputs=(0,),
+            span_kind="prefill-chunk",
         )
         self._extend_sample_fn = self.programs.register(
             "extend_sample",
             jax.jit(self._build_extend_sample(), donate_argnums=(2,)),
             carry_outputs=(1,),
+            span_kind="prefill-chunk",
         )
 
         # host-side per-slot state mirrors (pushed each decode step)
@@ -358,7 +452,9 @@ class ServeEngine:
         self._pages_op: jax.Array | None = None
         self._pages_version = -1
 
-        self.telemetry = {p: PhaseTelemetry(p) for p in PHASES}
+        self.telemetry = {
+            p: PhaseTelemetry(p, registry=self.registry) for p in PHASES
+        }
         self.completions: dict[int, Completion] = {}
         self._finished: list[Completion] = []
         self._next_id = 0
@@ -584,18 +680,26 @@ class ServeEngine:
         request_id = self._next_id
         self._next_id += 1
         self._submitted += 1
+        self._submitted_c.inc()
         seed = (
             request.seed
             if request.seed is not None
             else (self.seed * 1_000_003 + request_id) & 0x7FFFFFFF
         )
+        submitted_at = time.perf_counter()
+        if self.tracer.enabled:
+            self.tracer.event(
+                "submit", tid=request_track(request_id),
+                request=request_id, prompt=len(request.prompt),
+                max_new=request.max_new_tokens,
+            )
         self.scheduler.enqueue(
             RequestState(
                 request_id=request_id,
                 request=request,
                 slot=-1,
                 seed=seed,
-                submitted_at=time.perf_counter(),
+                submitted_at=submitted_at,
             )
         )
         return request_id
@@ -630,6 +734,8 @@ class ServeEngine:
         ):
             events.extend(self._decode_active())
         self._sample_kv_health()
+        self._queue_depth_g.set(len(self.scheduler.waiting))
+        self._active_slots_g.set(len(self.scheduler.active))
         return events
 
     def run_until_idle(self, max_steps: int | None = None) -> list[Completion]:
@@ -665,12 +771,20 @@ class ServeEngine:
         valid on an idle engine (no active or waiting requests)."""
         if self.scheduler.has_work:
             raise RuntimeError("reset_stats on a busy engine")
-        self.telemetry = {p: PhaseTelemetry(p) for p in PHASES}
+        # the registry resets in place (child handles stay valid — the
+        # scheduler and phase-telemetry counters keep working) and the
+        # tracer drops the warmup spans with the rest of the warmup stats
+        self.registry.reset()
+        self.tracer.clear()
+        self.telemetry = {
+            p: PhaseTelemetry(p, registry=self.registry) for p in PHASES
+        }
         self.monitor = StepMonitor(
             window=self.monitor.window.maxlen or 32,
             threshold=self.monitor.threshold,
             patience=self.monitor.patience,
             on_straggler=self.monitor.on_straggler,
+            histogram=self._step_hist,
         )
         self.scheduler.admitted_per_slot.clear()
         self.scheduler.preemptions = 0
@@ -732,6 +846,9 @@ class ServeEngine:
         self._kv_sums[0] += util
         self._kv_sums[1] += stranded
         self._kv_sums[2] += frag
+        self._kv_util_g.set(util)
+        self._kv_stranded_g.set(stranded)
+        self._kv_frag_g.set(frag)
 
     def metrics(self) -> dict:
         """KV memory health: pool utilization, stranded capacity and page
@@ -756,6 +873,7 @@ class ServeEngine:
             "mean_stranded_pct": self._kv_sums[1] / n,
             "mean_fragmentation_pct": self._kv_sums[2] / n,
         }
+        out["programs"] = self.programs.stats()
         if self.kv is not None:
             out["kv"] = self.kv.stats()
         else:
@@ -770,6 +888,31 @@ class ServeEngine:
                 "stranded_pct": stranded,
             }
         return out
+
+    def serve_metrics(self, port: int = 0, host: str = "127.0.0.1"):
+        """Expose this engine's :class:`~repro.obs.MetricsRegistry` over
+        HTTP (Prometheus text format at ``/metrics``) on a daemon thread.
+        ``port=0`` picks a free port.  Returns the
+        :class:`~repro.obs.MetricsServer`; call ``.close()`` to stop it."""
+        from repro.obs import MetricsServer
+
+        return MetricsServer(self.registry, port=port, host=host)
+
+    def profile_steps(self, n_steps: int, logdir: str) -> bool:
+        """Drive ``step()`` ``n_steps`` times under a ``jax.profiler``
+        capture window written to ``logdir``.  Returns False (and still
+        runs the steps) when the profiler is unavailable — the window is
+        opt-in observability, never a hard dependency."""
+        from repro.obs import profile_window
+
+        with profile_window(
+            logdir, tracer=self.tracer, name="serve-steps"
+        ) as captured:
+            for _ in range(n_steps):
+                if not self.scheduler.has_work:
+                    break
+                self.step()
+        return captured
 
     def lint(self) -> list:
         """Run the ``repro.analysis`` hot-path pass over every program this
@@ -845,7 +988,16 @@ class ServeEngine:
             return
         while True:
             try:
-                self.kv.ensure(slot, n_tokens)
+                added = self.kv.ensure(slot, n_tokens)
+                if added and self.tracer.enabled and (
+                    slot in self.scheduler.active
+                ):
+                    state = self.scheduler.active[slot]
+                    self.tracer.event(
+                        "kv-grow", tid=request_track(state.request_id),
+                        request=state.request_id, slot=slot,
+                        pages=len(added),
+                    )
                 return
             except PoolExhausted:
                 if not self._preempt_for_pages(slot):
@@ -901,6 +1053,7 @@ class ServeEngine:
             [prog.context[prog.pos : prog.pos + run]], np.int32
         )
         self._chunk_calls += 1
+        t0 = time.perf_counter()
         with self._phase("prefill"), meter_window(self.meter) as tele:
             if final:
                 temp, topk = self._request_knobs(state)
@@ -922,6 +1075,13 @@ class ServeEngine:
                 )
                 prog.pos += run
         self.telemetry["prefill"].add(tele, run)
+        if self.tracer.enabled:
+            self.tracer.add_span(
+                "prefill-chunk", t0, time.perf_counter(),
+                tid=request_track(state.request_id),
+                request=state.request_id, slot=slot, tokens=run,
+                final=final, step=self._steps,
+            )
 
     def _fresh_b1_cache(self) -> Any:
         return lm.init_cache(self.cfg, 1, self._slot_len)
@@ -986,8 +1146,23 @@ class ServeEngine:
         # kv.lengths needs no sync: alloc_slot/ensure already tracked the
         # context through admission and the chunk loop
         self._lengths[slot] = context
+        now = time.perf_counter()
+        if self.tracer.enabled:
+            track = request_track(state.request_id)
+            # the prefill span covers admission -> first token, including
+            # every chunk for chunked prompts (chunk sub-spans sit inside)
+            self.tracer.add_span(
+                "prefill", state.last_admitted_at or now, now, tid=track,
+                request=state.request_id, slot=slot, tokens=context,
+                step=self._steps,
+            )
+            if state.first_token_at is None:
+                self.tracer.event(
+                    "first-token", tid=track, request=state.request_id,
+                    token=first,
+                )
         if state.first_token_at is None:
-            state.first_token_at = time.perf_counter()
+            state.first_token_at = now
         state.tokens.append(first)
         events.append(
             Token(state.request_id, first, gen_index, "prefill", self._steps)
@@ -1020,6 +1195,7 @@ class ServeEngine:
                 self._pages_op = jnp.asarray(self.kv.array())
                 self._pages_version = self.kv.version
             pages = self._pages_op
+        t0 = time.perf_counter()
         self.monitor.start()
         with self._phase("decode"), meter_window(self.meter) as tele:
             tok, self.cache = self._decode_fn(
@@ -1035,6 +1211,19 @@ class ServeEngine:
             toks = np.asarray(tok)  # the only device->host transfer: (B,)
         self.monitor.stop(self._steps)
         self.telemetry["decode"].add(tele, len(active))
+        if self.tracer.enabled:
+            t1 = time.perf_counter()
+            # one fused-step span on the engine track, mirrored onto each
+            # participating request's track so per-request timelines show
+            # their decode cadence (and the gaps where they waited)
+            self.tracer.add_span(
+                "decode", t0, t1, batch=len(active), step=self._steps,
+            )
+            for state in active.values():
+                self.tracer.add_span(
+                    "decode", t0, t1, tid=request_track(state.request_id),
+                    request=state.request_id, step=self._steps,
+                )
 
         events: list[Token | Completion] = []
         for slot, state in active.items():
@@ -1065,7 +1254,16 @@ class ServeEngine:
             submitted_at=state.submitted_at,
             first_token_at=state.first_token_at or time.perf_counter(),
             finished_at=time.perf_counter(),
+            admitted_at=state.admitted_at,
         )
+        self._completed_c.inc()
+        self._generated_c.inc(len(completion.tokens))
+        if self.tracer.enabled:
+            self.tracer.event(
+                "complete", tid=request_track(state.request_id),
+                request=state.request_id, tokens=len(completion.tokens),
+                reason=completion.finish_reason,
+            )
         self.completions[state.request_id] = completion
         self._finished.append(completion)
         return completion

@@ -71,11 +71,33 @@ class Completion:
     submitted_at: float  # engine clock (time.perf_counter) timestamps
     first_token_at: float
     finished_at: float
+    #: when the scheduler last placed the request into a slot (None for
+    #: completions built before the scheduler stamped it)
+    admitted_at: float | None = None
 
     @property
     def ttft(self) -> float:
-        """Time from submit to first token (the prefill-side latency)."""
+        """Time from submit to first token (includes the queue wait)."""
         return self.first_token_at - self.submitted_at
+
+    @property
+    def ttft_admitted(self) -> float:
+        """Time from *admission* to first token — the model-side prefill
+        latency with the scheduler's queue wait subtracted out.  Folding
+        queue wait into TTFT hides scheduler effects; this is the number
+        that isolates them."""
+        return self.first_token_at - (
+            self.admitted_at
+            if self.admitted_at is not None
+            else self.submitted_at
+        )
+
+    @property
+    def queue_wait(self) -> float:
+        """Time from submit to (the last) admission."""
+        if self.admitted_at is None:
+            return 0.0
+        return self.admitted_at - self.submitted_at
 
     @property
     def latency(self) -> float:
@@ -96,6 +118,15 @@ class RequestState:
     tokens: list[int] = dataclasses.field(default_factory=list)
     #: monotonic admission order (preemption evicts the youngest first)
     admit_seq: int = -1
+    #: when the request (re-)entered the waiting queue — submit time, or
+    #: the preemption time after a requeue (feeds the "queue" trace span)
+    queued_at: float = 0.0
+    #: when the scheduler *first* placed the request into a slot (fixed
+    #: across preemptions — feeds ``Completion.ttft_admitted``)
+    admitted_at: float | None = None
+    #: the most recent admission (re-stamped on resume — anchors the
+    #: "prefill" trace span, which covers this admission's work only)
+    last_admitted_at: float = 0.0
 
     @property
     def done(self) -> bool:

@@ -28,9 +28,21 @@ cannot deadlock the queue.
 
 from __future__ import annotations
 
+import time
 from collections import deque
 
+from repro.obs import get_tracer
 from repro.serve.request import RequestState
+
+#: Virtual trace-track ids for per-request lifecycle spans — offset far
+#: above any real thread ident's low bits so request tracks sort together
+#: in the exported timeline.
+REQUEST_TRACK_BASE = 0x5E54_0000
+
+
+def request_track(request_id: int) -> int:
+    """The tracer track (Chrome `tid`) carrying one request's lifecycle."""
+    return REQUEST_TRACK_BASE + request_id
 
 
 class Scheduler:
@@ -41,6 +53,8 @@ class Scheduler:
         prompt_cost=None,
         kv=None,
         admit_tokens=None,
+        tracer=None,
+        metrics=None,
     ) -> None:
         if n_slots < 1:
             raise ValueError("need at least one slot")
@@ -69,9 +83,23 @@ class Scheduler:
         #: preempted-and-requeued requests (paged mode under page pressure)
         self.preemptions = 0
         self._admit_seq = 0
+        #: request-lifecycle tracing (queue spans, kv-alloc/free, preempt)
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self._admissions_c = self._preemptions_c = None
+        if metrics is not None:
+            self._admissions_c = metrics.counter(
+                "serve_admissions_total",
+                "requests admitted into a KV slot (re-admissions included)",
+            )
+            self._preemptions_c = metrics.counter(
+                "serve_preemptions_total",
+                "running requests evicted under page pressure and requeued",
+            )
 
     # -- queue side -----------------------------------------------------------
     def enqueue(self, state: RequestState) -> None:
+        if not state.queued_at:
+            state.queued_at = state.submitted_at or time.perf_counter()
         self.waiting.append(state)
 
     @property
@@ -117,8 +145,37 @@ class Scheduler:
             nxt.slot = slot
             nxt.admit_seq = self._admit_seq
             self._admit_seq += 1
-            if self.kv is not None:
-                self.kv.alloc_slot(slot, self.admit_tokens(nxt))
+            now = time.perf_counter()
+            if nxt.admitted_at is None:
+                # first admission only: ttft_admitted compares the first
+                # token against the first time the model saw the request
+                nxt.admitted_at = now
+            nxt.last_admitted_at = now
+            tr = self.tracer
+            track = request_track(nxt.request_id)
+            tokens = self.admit_tokens(nxt)
+            if tr.enabled:
+                tr.name_track(track, f"req {nxt.request_id}")
+                tr.add_span(
+                    "queue", nxt.queued_at or nxt.submitted_at, now,
+                    tid=track, request=nxt.request_id, slot=slot,
+                )
+            t0 = time.perf_counter()
+            pages = (
+                self.kv.alloc_slot(slot, tokens)
+                if self.kv is not None
+                else None
+            )
+            if tr.enabled:
+                # contiguous mode "allocates" by reserving the slot row;
+                # the span still marks where this request's KV came from
+                tr.add_span(
+                    "kv-alloc", t0, time.perf_counter(), tid=track,
+                    request=nxt.request_id, slot=slot, tokens=tokens,
+                    pages=len(pages) if pages is not None else 0,
+                )
+            if self._admissions_c is not None:
+                self._admissions_c.inc()
             self.active[slot] = nxt
             self.admitted_per_slot[slot] = (
                 self.admitted_per_slot.get(slot, 0) + 1
@@ -132,8 +189,12 @@ class Scheduler:
         its pages to the pool."""
         state = self.active.pop(slot)
         self._free.append(slot)
-        if self.kv is not None:
-            self.kv.free_slot(slot)
+        freed = self.kv.free_slot(slot) if self.kv is not None else 0
+        if self.tracer.enabled:
+            self.tracer.event(
+                "kv-free", tid=request_track(state.request_id),
+                request=state.request_id, slot=slot, pages=freed,
+            )
         return state
 
     def preempt(self, slot: int) -> RequestState:
@@ -145,11 +206,19 @@ class Scheduler:
         continuation is token-identical)."""
         state = self.active.pop(slot)
         self._free.append(slot)
-        if self.kv is not None:
-            self.kv.free_slot(slot)
+        freed = self.kv.free_slot(slot) if self.kv is not None else 0
         state.slot = -1
+        state.queued_at = time.perf_counter()
+        if self.tracer.enabled:
+            self.tracer.event(
+                "preempt", tid=request_track(state.request_id),
+                request=state.request_id, slot=slot, pages=freed,
+                generated=len(state.tokens),
+            )
         self.waiting.appendleft(state)
         self.preemptions += 1
+        if self._preemptions_c is not None:
+            self._preemptions_c.inc()
         return state
 
     # -- reporting -------------------------------------------------------------
