@@ -45,12 +45,25 @@ trace-demo:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --trace-out trace-demo.json --metrics-out trace-demo-metrics.txt
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) -m repro.obs.timeline trace-demo.json --check
 
-# Static analysis: legality + hot-path + paging passes over every zoo
-# (arch, phase) program and two tiny serve engines, ratcheted against the
-# checked-in analysis_baseline.json — CI fails only on NEW findings.
+# Static analysis: legality + resource-envelope + hot-path + paging
+# passes over every zoo (arch, phase) program and two tiny serve engines,
+# ratcheted against the checked-in analysis_baseline.json — CI fails only
+# on NEW findings.  Resource verdicts check the static cpu-host-16g
+# envelope so they are identical on every host; then a serve preflight
+# proves the static capacity gate passes for a config that fits.
 .PHONY: analyze
 analyze:
-	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) -m repro.analysis.lint --fail-on-new
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) -m repro.analysis.lint --resources --fail-on-new
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) -m repro.launch.serve --arch llama3.2-1b --reduced --slots 2 --max-len 64 --page-size 16 --envelope cpu-host-16g --preflight
+
+# Static capacity check of a serve deployment without booting the engine
+# (override ARCH/ENVELOPE/PREFLIGHT_ARGS as needed).
+.PHONY: preflight
+ARCH ?= llama3.2-1b
+ENVELOPE ?= host
+PREFLIGHT_ARGS ?= --reduced --slots 2 --max-len 64
+preflight:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) -m repro.launch.serve --arch $(ARCH) --envelope $(ENVELOPE) $(PREFLIGHT_ARGS) --preflight
 
 .PHONY: deps-dev
 deps-dev:

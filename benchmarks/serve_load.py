@@ -208,6 +208,9 @@ def main() -> None:
     ap.add_argument("--json-out", default=None,
                     help="write a machine-readable snapshot (e.g. "
                          "BENCH_serve.json) next to the printed report")
+    ap.add_argument("--preflight", action="store_true",
+                    help="static capacity check against --envelope before "
+                         "the load run; abort when the config cannot fit")
     args = ap.parse_args()
     if args.fast:
         args.reduced = True
@@ -217,6 +220,13 @@ def main() -> None:
         args.rate = max(args.rate, 8.0)
         args.slots = min(args.slots, 3)
         args.max_len = min(args.max_len, 64)
+
+    if args.preflight:
+        from repro.launch.serve import preflight
+
+        rc = preflight(args)
+        if rc != 0:
+            raise SystemExit(rc)
 
     engine = build_engine(args)
     rng = np.random.default_rng(args.seed)

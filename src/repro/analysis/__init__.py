@@ -1,11 +1,16 @@
 """repro.analysis — static analysis over traced programs (paper Step 1).
 
-Three passes, each producing typed :class:`~repro.analysis.Diagnostic`s:
+Four passes, each producing typed :class:`~repro.analysis.Diagnostic`s:
 
 * **legality** (``repro.analysis.legality``) — classify every shelf-block
   (block, target) binding legal / illegal / unknown before measurement;
   feeds ``BindingSpace.mark_illegal`` so search strategies prune instead
   of timing.
+* **resources** (``repro.analysis.resources``) — the paper's FPGA
+  resource-fit check (Step 5) for GPU/TPU memory: peak-live-bytes per
+  traced program via jaxpr liveness analysis, per-binding fit verdicts
+  against a :class:`DeviceEnvelope`, and a static serve capacity planner
+  (``plan_serve_capacity`` / ``serve --preflight``).
 * **hotpath** (``repro.analysis.hotpath``) — lint jitted serve programs
   for host-sync, retrace-risk, callbacks and constant-capture bloat.
 * **paging** (``repro.analysis.paging``) — prove the paged-KV page-table
@@ -15,6 +20,12 @@ Three passes, each producing typed :class:`~repro.analysis.Diagnostic`s:
 live engines, diffing against the checked-in ``analysis_baseline.json``.
 """
 
+from repro.analysis.devices import (  # noqa: F401
+    STATIC_ENVELOPES,
+    DeviceEnvelope,
+    probe_device_envelope,
+    resolve_envelope,
+)
 from repro.analysis.diagnostics import (  # noqa: F401
     AnalysisReport,
     Baseline,
@@ -40,6 +51,17 @@ from repro.analysis.paging import (  # noqa: F401
     assert_page_table,
     check_page_table,
 )
+from repro.analysis.resources import (  # noqa: F401
+    CapacityPlan,
+    MemoryEstimate,
+    ResourceHint,
+    ResourceReport,
+    ResourceVerdict,
+    check_binding_space_resources,
+    estimate_memory,
+    lint_shelf_coverage,
+    plan_serve_capacity,
+)
 
 __all__ = [
     "AnalysisReport",
@@ -57,4 +79,17 @@ __all__ = [
     "PageAliasError",
     "assert_page_table",
     "check_page_table",
+    "DeviceEnvelope",
+    "STATIC_ENVELOPES",
+    "probe_device_envelope",
+    "resolve_envelope",
+    "CapacityPlan",
+    "MemoryEstimate",
+    "ResourceHint",
+    "ResourceReport",
+    "ResourceVerdict",
+    "check_binding_space_resources",
+    "estimate_memory",
+    "lint_shelf_coverage",
+    "plan_serve_capacity",
 ]

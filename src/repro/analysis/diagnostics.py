@@ -33,12 +33,13 @@ RATCHET_SEVERITIES = ("warning", "error")
 class Diagnostic:
     """One finding: ``pass_name`` flagged ``subject`` inside ``program``."""
 
-    pass_name: str  # "legality" | "hotpath" | "paging"
+    pass_name: str  # "legality" | "hotpath" | "paging" | "resources"
     code: str  # machine-readable rule id, e.g. "host-sync"
     severity: str  # "info" | "warning" | "error"
     program: str  # traced program / zoo cell / engine program name
     subject: str  # block binding, output index, slot/page — the *what*
     message: str  # human-readable explanation
+    platform: str = ""  # host backend / envelope the finding was made on
 
     def __post_init__(self) -> None:
         if self.severity not in SEVERITIES:
@@ -47,8 +48,10 @@ class Diagnostic:
     @property
     def fingerprint(self) -> str:
         """Stable identity used for baseline matching.  Deliberately
-        excludes ``message`` so rewording an explanation doesn't churn the
-        baseline file."""
+        excludes ``message`` (rewording an explanation shouldn't churn the
+        baseline file) and ``platform`` (the same finding on a CPU CI host
+        and a TPU production host must ratchet as one entry — host facts
+        are normalized out of the checked-in baseline)."""
         return f"{self.pass_name}:{self.code}:{self.program}:{self.subject}"
 
     def to_dict(self) -> dict[str, str]:
@@ -63,12 +66,14 @@ class Diagnostic:
             program=d["program"],
             subject=d["subject"],
             message=d.get("message", ""),
+            platform=d.get("platform", ""),
         )
 
     def __str__(self) -> str:
+        plat = f" [{self.platform}]" if self.platform else ""
         return (
             f"{self.severity}[{self.pass_name}/{self.code}] "
-            f"{self.program} :: {self.subject} — {self.message}"
+            f"{self.program} :: {self.subject}{plat} — {self.message}"
         )
 
 

@@ -67,15 +67,24 @@ class LegalityReport:
     platform: str
     verdicts: list[BlockVerdict] = dataclasses.field(default_factory=list)
     features: ProgramFeatures | None = None
+    #: Resource verdicts when ``check_binding_space`` ran with an envelope
+    #: (a ``repro.analysis.resources.ResourceReport``), else None.
+    resources: Any = None
 
     @property
     def illegal(self) -> dict[tuple[str, str], str]:
-        """The ``(block, target) -> reason`` map ``mark_illegal`` consumes."""
-        return {
+        """The ``(block, target) -> reason`` map ``mark_illegal`` consumes.
+        Legality reasons take precedence; statically-OOM bindings from the
+        resource pass (when it ran) merge in with their ``memory:`` tag."""
+        out: dict[tuple[str, str], str] = {}
+        if self.resources is not None:
+            out.update(self.resources.oom)
+        out.update({
             (v.block, v.target): v.reason
             for v in self.verdicts
             if v.status == ILLEGAL
-        }
+        })
+        return out
 
     def counts(self) -> dict[str, int]:
         out = {LEGAL: 0, ILLEGAL: 0, UNKNOWN: 0}
@@ -97,8 +106,11 @@ class LegalityReport:
                     program=self.program,
                     subject=f"{v.block}->{v.target}",
                     message=v.reason or f"no legality metadata for {v.target}",
+                    platform=self.platform,
                 )
             )
+        if self.resources is not None:
+            diags.extend(self.resources.diagnostics())
         return diags
 
 
@@ -162,6 +174,8 @@ def check_binding_space(
     platform: str | None = None,
     probe_trace: bool = True,
     program: str = "",
+    envelope: Any = None,
+    resource_hints: Mapping[tuple[str, str], Any] | None = None,
 ) -> LegalityReport:
     """Classify every (block, target) choice of a ``BindingSpace``.
 
@@ -170,6 +184,11 @@ def check_binding_space(
     probe-traced under their single-block binding — ``jax.make_jaxpr``
     only, so an hours-long candidate compile is never spent on a binding
     the probe can reject (the paper's FPGA pre-filter economics).
+
+    When ``envelope`` is given (a ``DeviceEnvelope``, a static-table name,
+    or ``"host"``/``True`` to probe the live runtime), the memory-envelope
+    pass also runs — the paper's FPGA resource-fit check — and its
+    statically-OOM bindings join ``report.illegal`` tagged ``memory:``.
     """
     import jax
 
@@ -180,6 +199,16 @@ def check_binding_space(
     if platform is None:
         platform = jax.default_backend()
     report = LegalityReport(program=program or space.tag, platform=platform)
+    if envelope is not None:
+        from repro.analysis.resources import check_binding_space_resources
+
+        report.resources = check_binding_space_resources(
+            space,
+            tuple(args),
+            envelope=envelope,
+            hints=resource_hints,
+            program=program or space.tag,
+        )
 
     features: ProgramFeatures | None = None
     try:

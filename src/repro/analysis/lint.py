@@ -17,14 +17,25 @@ repo actually ships:
   token ids only, recomposition never retraces) and the page-aliasing
   sanitizer over the final page-table operand.
 
+With ``--resources``, the memory-envelope pass also runs: every zoo
+cell's candidate bindings are fitted against ``--envelope`` (default
+``cpu-host-16g``, a *static* envelope so verdicts are host-independent)
+and every serve engine gets a static capacity plan, whose cannot-fit
+verdicts are ratcheted warnings.  The kernel-shelf coverage lint
+(every implementation must declare ``BLOCK_LEGALITY`` *and*
+``BLOCK_RESOURCES``) always runs.
+
 Diagnostics diff against a checked-in baseline (``analysis_baseline.json``)
 so ``--fail-on-new`` fails CI only on *new* warning/error findings — the
 ratchet discipline of a type-checker baseline.  ``info`` diagnostics
-(host-platform-dependent legality verdicts) never enter the ratchet.
+(host-platform-dependent legality verdicts, per-binding resource fits)
+never enter the ratchet, and diagnostic fingerprints exclude the platform
+they were found on.
 
   PYTHONPATH=src python -m repro.analysis.lint --fail-on-new
   PYTHONPATH=src python -m repro.analysis.lint --update-baseline
   PYTHONPATH=src python -m repro.analysis.lint --arch llama3.2-1b --json
+  PYTHONPATH=src python -m repro.analysis.lint --resources --json
 """
 
 from __future__ import annotations
@@ -61,8 +72,14 @@ def lint_zoo_cell(
     seed: int = 0,
     targets: Sequence[str] | None = None,
     probe_trace: bool = True,
+    envelope: object = None,
+    resources_out: dict | None = None,
 ) -> list[Diagnostic]:
-    """Legality + static hot-path lints for one configs-zoo cell."""
+    """Legality + static hot-path lints for one configs-zoo cell.
+
+    With ``envelope`` the memory-envelope pass runs too; its per-binding
+    fit report lands in ``resources_out`` (keyed by program) when given.
+    """
     from repro.analysis.hotpath import lint_traced_program
     from repro.analysis.legality import check_binding_space
     from repro.core import blocks as blocks_mod
@@ -81,11 +98,13 @@ def lint_zoo_cell(
         space = BindingSpace(
             builder, blocks=block_map, registry=registry, tag=program
         )
-        diags.extend(
-            check_binding_space(
-                space, args, probe_trace=probe_trace, program=program
-            ).diagnostics()
+        rep = check_binding_space(
+            space, args, probe_trace=probe_trace, program=program,
+            envelope=envelope,
         )
+        diags.extend(rep.diagnostics())
+        if rep.resources is not None and resources_out is not None:
+            resources_out[program] = rep.resources.to_dict()
     diags.extend(lint_traced_program(program, builder(), args))
     return diags
 
@@ -101,10 +120,17 @@ def lint_serve_engine(
     gen: int = 4,
     max_steps: int = 256,
     seed: int = 0,
+    envelope: object = None,
+    resources_out: dict | None = None,
 ) -> list[Diagnostic]:
     """Serve a short trace on a tiny reduced engine, then run its hot-path
     and page-table lints.  Program names are rewritten to
-    ``serve:<arch>:<program>`` so fingerprints stay unique across archs."""
+    ``serve:<arch>:<program>`` so fingerprints stay unique across archs.
+
+    With ``envelope`` the engine's static capacity plan joins the
+    diagnostics (``capacity-oom`` is a ratcheted warning) and its full
+    figures land in ``resources_out`` when given.
+    """
     import numpy as np
 
     from repro.configs import get_config
@@ -121,8 +147,15 @@ def lint_serve_engine(
         engine.submit(Request(prompt, max_new_tokens=gen))
     engine.run_until_idle(max_steps=max_steps)
 
+    raw = list(engine.lint())
+    if envelope is not None:
+        plan = engine.plan_capacity(envelope)
+        raw.extend(plan.diagnostics(program=f"{cfg.name}:capacity"))
+        if resources_out is not None:
+            resources_out[f"serve:{arch}:capacity"] = plan.to_dict()
+
     diags = []
-    for d in engine.lint():
+    for d in raw:
         prog = d.program
         if prog.startswith(cfg.name + ":"):
             prog = prog[len(cfg.name) + 1:]
@@ -138,21 +171,34 @@ def run_lint(
     probe_trace: bool = True,
     seed: int = 0,
     verbose: bool = False,
+    envelope: object = None,
+    resources_out: dict | None = None,
 ) -> AnalysisReport:
     """The full sweep the CLI and the fast-tier test share.
 
     Cells that cannot be built on this host are skipped with a
     ``UserWarning`` (matching ``plan_zoo``'s sweep discipline) rather than
-    aborting the whole lint.
+    aborting the whole lint.  ``envelope`` turns the memory-envelope pass
+    on for zoo cells and serve engines; the shelf-coverage lint always
+    runs (missing metadata must ratchet regardless of envelope choice).
     """
+    from repro.analysis.resources import lint_shelf_coverage
     from repro.configs import ARCH_NAMES
 
     report = AnalysisReport()
+    try:
+        report.extend(lint_shelf_coverage())
+    except Exception as e:  # noqa: BLE001 — keep sweeping
+        warnings.warn(
+            f"lint: shelf coverage failed: {type(e).__name__}: {e}",
+            stacklevel=2,
+        )
     for arch in archs if archs is not None else ARCH_NAMES:
         for kind in kinds:
             try:
                 diags = lint_zoo_cell(
-                    arch, kind, seed=seed, probe_trace=probe_trace
+                    arch, kind, seed=seed, probe_trace=probe_trace,
+                    envelope=envelope, resources_out=resources_out,
                 )
             except Exception as e:  # noqa: BLE001 — keep sweeping
                 warnings.warn(
@@ -170,7 +216,8 @@ def run_lint(
             # exercise the contiguous path
             paged = "m" not in _pattern_of(arch)
             diags = lint_serve_engine(
-                arch, page_size=8 if paged else None, seed=seed
+                arch, page_size=8 if paged else None, seed=seed,
+                envelope=envelope, resources_out=resources_out,
             )
         except Exception as e:  # noqa: BLE001 — keep sweeping
             warnings.warn(
@@ -205,6 +252,14 @@ def main(argv: Sequence[str] | None = None) -> int:
     ap.add_argument("--no-probe", action="store_true",
                     help="skip the per-binding probe trace (metadata-only "
                          "legality verdicts)")
+    ap.add_argument("--resources", action="store_true",
+                    help="run the memory-envelope pass: per-binding fit "
+                         "verdicts for zoo cells and a static capacity "
+                         "plan per serve engine")
+    ap.add_argument("--envelope", default="cpu-host-16g",
+                    help="device envelope --resources checks against: a "
+                         "static name (default cpu-host-16g so verdicts "
+                         "ratchet identically on every host) or 'host'")
     ap.add_argument("--baseline", default=DEFAULT_BASELINE,
                     help="accepted-diagnostics file for the ratchet")
     ap.add_argument("--fail-on-new", action="store_true",
@@ -223,10 +278,13 @@ def main(argv: Sequence[str] | None = None) -> int:
     kinds = tuple(k for k in args.kinds.split(",") if k)
     serve_archs = tuple(a for a in args.serve_arch.split(",") if a)
 
+    resources_out: dict | None = {} if args.resources else None
     report = run_lint(
         archs, kinds, serve_archs,
         probe_trace=not args.no_probe, seed=args.seed,
         verbose=not args.json,
+        envelope=args.envelope if args.resources else None,
+        resources_out=resources_out,
     )
     baseline = Baseline.load(args.baseline)
     new = report.new_versus(baseline)
@@ -238,6 +296,11 @@ def main(argv: Sequence[str] | None = None) -> int:
         payload = report.to_dict()
         payload["new"] = [d.to_dict() for d in new]
         payload["baseline"] = args.baseline
+        if resources_out is not None:
+            payload["resources"] = {
+                "envelope": args.envelope,
+                "reports": resources_out,
+            }
         print(json.dumps(payload, indent=2))
     else:
         counts = report.counts()
@@ -247,6 +310,13 @@ def main(argv: Sequence[str] | None = None) -> int:
             f"{counts['info']} info); {len(new)} new vs baseline "
             f"'{args.baseline}'"
         )
+        if resources_out is not None:
+            plans = [r for r in resources_out.values() if "fits" in r]
+            fits = sum(1 for r in plans if r["fits"])
+            print(
+                f"resources: {len(resources_out)} envelope reports against "
+                f"'{args.envelope}' ({fits}/{len(plans)} capacity plans fit)"
+            )
         for d in sorted(report.diagnostics, key=lambda d: d.fingerprint):
             marker = " [NEW]" if d in new else ""
             print(f"  {d}{marker}")

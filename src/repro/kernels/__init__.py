@@ -9,6 +9,7 @@ ref/xla/pallas per deployment environment.
 import functools
 
 from repro.analysis.legality import TargetConstraints
+from repro.analysis.resources import ResourceHint
 from repro.core import blocks
 from repro.kernels import ops, ref  # noqa: F401
 
@@ -63,6 +64,10 @@ _SHELF_IMPLS = _register_all()
 #: Block names registered by this package — the fixed "kernel shelf".
 SHELF_BLOCKS = tuple(sorted({block for block, _, _ in _SHELF_IMPLS}))
 
+#: Every registered (block, target) pair — the coverage universe the
+#: shelf-coverage lint checks BLOCK_LEGALITY / BLOCK_RESOURCES against.
+SHELF_IMPL_PAIRS = tuple((block, target) for block, target, _ in _SHELF_IMPLS)
+
 #: Registration-time hash of the shelf sources, stamped into the PlanStore
 #: environment fingerprint so a kernel rewrite invalidates stored plans.
 #: Snapshotted from the registration list itself — NOT from live registry
@@ -105,3 +110,52 @@ def _legality_metadata() -> dict[tuple[str, str], TargetConstraints]:
 
 #: (block, target) -> TargetConstraints for the whole shelf.
 BLOCK_LEGALITY = _legality_metadata()
+
+
+def _resource_metadata() -> dict[tuple[str, str], ResourceHint]:
+    """Memory-envelope hints for every shelf implementation, consumed by
+    the ``repro.analysis.resources`` fit pass (the paper's Step 5
+    resource check).  ref/xla formulations add no working-set overhead
+    beyond the traced program; the Pallas kernels declare the resident
+    VMEM tile footprint their grids keep on-chip (checked against
+    ``DeviceEnvelope.vmem_bytes``) plus any HBM scratch."""
+    plain = ResourceHint()
+    f32 = 4
+    tile = 128
+    out: dict[tuple[str, str], ResourceHint] = {}
+    for block in ("matmul", "attention", "rmsnorm", "ssd_scan"):
+        out[(block, "ref")] = plain
+        out[(block, "xla")] = plain
+    out[("matmul", "pallas")] = ResourceHint(
+        vmem_tile_bytes=3 * tile * tile * f32,
+        notes="A/B/acc tiles resident per grid step",
+    )
+    out[("attention", "pallas")] = ResourceHint(
+        vmem_tile_bytes=5 * tile * tile * f32,
+        notes="q tile + streamed k/v tiles + acc + running stats",
+    )
+    out[("rmsnorm", "pallas")] = ResourceHint(
+        vmem_tile_bytes=2 * tile * tile * f32,
+        notes="row tile in + out; weight row rides along",
+    )
+    out[("ssd_scan", "pallas")] = ResourceHint(
+        memory_multiplier=1.25,
+        vmem_tile_bytes=4 * tile * tile * f32,
+        notes="chunked SSD keeps inter-chunk carry states in HBM",
+    )
+    out[("fft2d", "xla")] = plain
+    out[("fft2d", "pallas")] = ResourceHint(
+        memory_multiplier=2.0,
+        vmem_tile_bytes=4 * tile * tile * f32,
+        notes="matmul-DFT materialises complex as split re/im planes",
+    )
+    out[("lu", "xla")] = plain
+    out[("lu", "pallas")] = ResourceHint(
+        vmem_tile_bytes=3 * tile * tile * f32,
+        notes="panel + trailing-block tiles for the Schur update",
+    )
+    return out
+
+
+#: (block, target) -> ResourceHint for the whole shelf.
+BLOCK_RESOURCES = _resource_metadata()

@@ -22,6 +22,7 @@ measured/estimated provenance, and ``--sampler`` sets the default policy
 from __future__ import annotations
 
 import argparse
+import sys
 
 import numpy as np
 
@@ -201,9 +202,55 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--metrics-out", default=None,
                     help="write a Prometheus text snapshot of the engine "
                          "metrics registry here after the run")
+    ap.add_argument("--envelope", default=None,
+                    help="device envelope for capacity checks: a static "
+                         "name (a100-40g, cpu-host-16g, tiny-32m, ...) or "
+                         "'host' to probe the live device (default)")
 
 
-def main() -> None:
+def preflight(args: argparse.Namespace) -> int:
+    """Static capacity check of the requested deployment — the paper's
+    FPGA resource-fit gate applied before engine boot.  Sizes params +
+    KV cache from metadata (nothing is materialised, so full-size
+    configs check in milliseconds) against ``--envelope`` and refuses to
+    proceed when they cannot fit.  Returns a process exit code: 0 fits,
+    2 does not."""
+    from repro.analysis.resources import plan_serve_capacity
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    plan = plan_serve_capacity(
+        cfg,
+        n_slots=args.slots,
+        max_len=args.max_len,
+        page_size=args.page_size,
+        n_pages=args.n_pages,
+        envelope=args.envelope,
+    )
+    print(plan.summary())
+    if (
+        args.prefill_chunk
+        and plan.max_prefill_tokens is not None
+        and args.prefill_chunk > plan.max_prefill_tokens
+    ):
+        print(
+            f"preflight: note --prefill-chunk {args.prefill_chunk} exceeds "
+            f"the activation-headroom bound ({plan.max_prefill_tokens})",
+            file=sys.stderr,
+        )
+    if not plan.fits:
+        print(
+            f"preflight: FAIL — {plan.arch} with {plan.n_slots} slots x "
+            f"{plan.max_len} tokens does not fit {plan.envelope.name}",
+            file=sys.stderr,
+        )
+        return 2
+    print("preflight: OK")
+    return 0
+
+
+def main(argv: "list[str] | None" = None) -> int:
     ap = argparse.ArgumentParser()
     add_engine_args(ap)
     ap.add_argument("--requests", type=int, default=8)
@@ -213,7 +260,14 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--gen-jitter", type=int, default=4)
     ap.add_argument("--max-steps", type=int, default=10_000)
-    args = ap.parse_args()
+    ap.add_argument("--preflight", action="store_true",
+                    help="static capacity check only: size params + KV "
+                         "against --envelope and exit (0 fits, 2 not) "
+                         "without booting the engine")
+    args = ap.parse_args(argv)
+
+    if args.preflight:
+        return preflight(args)
 
     engine = build_engine(args)
     rng = np.random.default_rng(args.seed)
@@ -258,7 +312,8 @@ def main() -> None:
     print(f"sample (request {sample.request_id}):",
           np.asarray(sample.tokens[:16]))
     write_obs_outputs(engine, args)
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

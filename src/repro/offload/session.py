@@ -170,6 +170,8 @@ class OffloadSession:
         rtol: float = 1e-3,
         force_search: bool = False,
         legality: bool = False,
+        resources: Any = False,
+        resource_hints: Mapping[tuple[str, str], Any] | None = None,
         tracer: Any = None,
     ) -> None:
         self.target = target
@@ -205,6 +207,13 @@ class OffloadSession:
         self.force_search = force_search
         self.legality = legality
         self.legality_report: Any = None
+        #: Memory-envelope pre-filter (paper Step 5): False = off; True /
+        #: "host" = probe the live device; a name = STATIC_ENVELOPES entry;
+        #: or a DeviceEnvelope.  Statically-OOM bindings are pruned like
+        #: illegal ones, with "memory:"-tagged reasons.
+        self.resources = resources
+        self.resource_hints = resource_hints
+        self.resources_report: Any = None
         self._engine = engine
         self._patterns = patterns
         self._blocks = blocks
@@ -357,6 +366,23 @@ class OffloadSession:
                 report = check_binding_space(self._space, self.args)
                 self._space.mark_illegal(report.illegal)
                 self.legality_report = report
+            if (
+                self.resources is not False
+                and self.resources is not None
+                and isinstance(self._space, BindingSpace)
+            ):
+                from repro.analysis.resources import (
+                    check_binding_space_resources,
+                )
+
+                rreport = check_binding_space_resources(
+                    self._space,
+                    self.args,
+                    envelope=self.resources,
+                    hints=self.resource_hints,
+                )
+                self._space.mark_illegal(rreport.oom)
+                self.resources_report = rreport
             self._done.add("discover")
         return found
 

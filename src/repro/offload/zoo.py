@@ -244,6 +244,7 @@ def plan_zoo(
     verify: bool = False,
     force_search: bool = False,
     legality: bool = False,
+    resources: Any = False,
     quiet: bool = True,
 ) -> dict[tuple[str, str], OffloadResult]:
     """Search and persist an offload plan for every (arch, kind) cell.
@@ -256,7 +257,10 @@ def plan_zoo(
     provenance recorded on every trial).  ``legality=True`` runs the
     ``repro.analysis`` static legality pass per cell so strategies prune
     statically-illegal bindings instead of measuring them (required when
-    ``targets`` includes 'pallas' on a non-TPU host).  Returns
+    ``targets`` includes 'pallas' on a non-TPU host).  ``resources``
+    (True / "host" / an envelope name / a ``DeviceEnvelope``) additionally
+    runs the memory-envelope pass so statically-OOM bindings are pruned
+    before measurement — the paper's FPGA resource-fit check.  Returns
     ``{(arch, kind): OffloadResult}``; cells whose step cannot be built or
     measured on this host are skipped with a ``UserWarning`` (regardless
     of ``quiet``, which only silences progress lines) rather than
@@ -305,6 +309,7 @@ def plan_zoo(
                 registry=registry,
                 force_search=force_search,
                 legality=legality,
+                resources=resources,
             )
             result = session.run(verify=verify)
         except Exception as e:  # noqa: BLE001 — keep sweeping other cells
@@ -348,6 +353,14 @@ def main() -> None:
                     help="run the repro.analysis static legality pass per "
                          "cell; statically-illegal bindings are pruned "
                          "from the search instead of measured")
+    ap.add_argument("--resources", action="store_true",
+                    help="run the repro.analysis memory-envelope pass per "
+                         "cell; statically-OOM bindings are pruned from "
+                         "the search instead of measured")
+    ap.add_argument("--envelope", default=None,
+                    help="device envelope for --resources: a static name "
+                         "(e.g. a100-40g, cpu-host-16g, tiny-32m) or "
+                         "'host' to probe the live device (default)")
     ap.add_argument("--objective", default="latency",
                     help="latency | perf_per_watt")
     ap.add_argument("--executor", default="serial",
@@ -383,6 +396,7 @@ def main() -> None:
         verify=args.verify,
         force_search=args.force,
         legality=args.legality,
+        resources=(args.envelope or True) if args.resources else False,
         quiet=False,
     )
     print(f"planned {len(results)}/{len(cells)} cells -> {args.plan_dir}")

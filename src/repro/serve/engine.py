@@ -297,6 +297,18 @@ class ServeEngine:
         self._kv_frag_g = self.registry.gauge(
             "serve_kv_fragmentation_pct", "partial-page fragmentation"
         )
+        self._capacity_fits_g = self.registry.gauge(
+            "serve_capacity_fits",
+            "1 when the last plan_capacity() verdict fit its envelope",
+        )
+        self._capacity_headroom_g = self.registry.gauge(
+            "serve_capacity_headroom_bytes",
+            "bytes of envelope headroom from the last plan_capacity()",
+        )
+        self._capacity_max_slots_g = self.registry.gauge(
+            "serve_capacity_max_slots",
+            "max slots the envelope fits at this max_len (plan_capacity)",
+        )
         self._submitted_c = self.registry.counter(
             "serve_requests_submitted_total", "requests accepted by submit()"
         )
@@ -914,12 +926,15 @@ class ServeEngine:
                 self.step()
         return captured
 
-    def lint(self) -> list:
+    def lint(self, envelope: Any = None) -> list:
         """Run the ``repro.analysis`` hot-path pass over every program this
         engine has actually called (host-sync, retrace drift, callbacks,
         constant capture) plus the page-aliasing sanitizer over the current
-        page-table operand.  Returns the diagnostics; empty means the
-        PR-4/5 serving contracts hold for the traffic served so far."""
+        page-table operand.  With ``envelope`` (a ``DeviceEnvelope`` or
+        static-table name), the static capacity plan's verdict joins the
+        diagnostics — a deployment that cannot fit is a ratchetable
+        ``capacity-oom`` warning.  Returns the diagnostics; empty means
+        the serving contracts hold for the traffic served so far."""
         from repro.analysis.paging import check_page_table
 
         diags = list(self.programs.lint())
@@ -931,7 +946,40 @@ class ServeEngine:
                     program=f"{self.cfg.name}:page-table",
                 )
             )
+        if envelope is not None:
+            plan = self.plan_capacity(envelope)
+            diags.extend(
+                plan.diagnostics(program=f"serve:{self.cfg.name}:capacity")
+            )
         return diags
+
+    def plan_capacity(self, envelope: Any = None) -> Any:
+        """Static capacity plan of *this* deployment against a device
+        envelope (default: probe the live device) — the serve-side
+        analogue of the paper's FPGA resource-fit pre-check.  The plan's
+        pool-token figure is cross-checked against the live ``PagePool``
+        so the static math can never drift from the engine's accounting,
+        and fit/headroom land on the metrics registry for the re-planner
+        to watch."""
+        from repro.analysis.resources import plan_serve_capacity
+
+        plan = plan_serve_capacity(
+            self.cfg,
+            n_slots=self.n_slots,
+            max_len=self.max_len,
+            page_size=self.kv.pool.page_size if self.kv is not None else None,
+            n_pages=self.kv.pool.n_pages if self.kv is not None else None,
+            envelope=envelope,
+        )
+        if self.kv is not None and plan.pool_tokens != self.kv.pool.token_capacity:
+            raise AssertionError(
+                f"capacity plan sized the pool at {plan.pool_tokens} tokens "
+                f"but the live PagePool holds {self.kv.pool.token_capacity}"
+            )
+        self._capacity_fits_g.set(1.0 if plan.fits else 0.0)
+        self._capacity_headroom_g.set(float(plan.headroom_bytes))
+        self._capacity_max_slots_g.set(float(plan.max_slots))
+        return plan
 
     # -- phase execution -------------------------------------------------------
     def _padded_len(self, length: int) -> int:
