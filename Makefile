@@ -37,6 +37,13 @@ serve-bench:
 serve-bench-paged:
 	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/serve_load.py --fast --meter auto --page-size 16 --prefill-chunk 8 --json-out BENCH_serve_paged.json
 
+# Paged-attention microbench: fused page walk vs gathered view across
+# page sizes — measured latency where the kernel can run, static
+# peak-live-bytes everywhere.  Snapshot lands in BENCH_paged_attn.json.
+.PHONY: bench-paged-attn
+bench-paged-attn:
+	PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) $(PYTHON) benchmarks/paged_attention_bench.py --json-out BENCH_paged_attn.json
+
 # Observability demo: run the fast serving trace with the lifecycle
 # tracer on, write trace-demo.json (loadable at ui.perfetto.dev) and a
 # Prometheus snapshot, then print the terminal span summary.

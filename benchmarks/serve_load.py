@@ -145,6 +145,7 @@ def snapshot(engine, args, makespan, completions) -> dict:
             "plan_dir": args.plan_dir,
             "page_size": args.page_size,
             "n_pages": args.n_pages,
+            "decode_impl": args.decode_impl,
             "prefill_bucket": args.prefill_bucket,
             "prefill_chunk": args.prefill_chunk,
             "step_budget": args.step_budget,

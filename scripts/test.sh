@@ -16,7 +16,8 @@ case "$mode" in
       tests/test_pattern_db.py tests/test_similarity.py \
       tests/test_interface.py tests/test_hlo_cost.py \
       tests/test_analysis.py tests/test_jaxpr_analysis.py \
-      tests/test_resources.py tests/test_obs.py
+      tests/test_resources.py tests/test_obs.py \
+      tests/test_kernels_paged_attention.py
     ;;
   full)
     exec python -m pytest -x -q

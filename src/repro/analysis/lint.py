@@ -93,7 +93,7 @@ def lint_zoo_cell(
     )
     registry = blocks_mod.registry
     diags: list[Diagnostic] = []
-    block_map = _cell_blocks(cfg, registry, targets)
+    block_map = _cell_blocks(cfg, registry, targets, kind)
     if block_map:
         space = BindingSpace(
             builder, blocks=block_map, registry=registry, tag=program

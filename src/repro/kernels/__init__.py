@@ -11,7 +11,7 @@ import functools
 from repro.analysis.legality import TargetConstraints
 from repro.analysis.resources import ResourceHint
 from repro.core import blocks
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import attention_xla, ops, ref  # noqa: F401
 
 
 def _register_all() -> list[tuple[str, str, object]]:
@@ -25,10 +25,18 @@ def _register_all() -> list[tuple[str, str, object]]:
          "blocked MXU matmul"),
         # attention
         ("attention", "ref", ref.attention_ref, "softmax einsum oracle"),
-        ("attention", "xla", ref.attention_ref, "XLA attention"),
+        ("attention", "xla", attention_xla.attention_chunked,
+         "chunked online-softmax attention (memory-safe at long context)"),
         ("attention", "pallas",
          functools.partial(ops.flash_attention, backend="pallas"),
          "flash attention, VMEM-tiled"),
+        # paged attention (the serving decode/extend hot loop)
+        ("paged_attention", "xla",
+         functools.partial(ops.paged_attention, backend="xla"),
+         "rolled page-walk gather + dense masked softmax"),
+        ("paged_attention", "pallas",
+         functools.partial(ops.paged_attention, backend="pallas"),
+         "fused page-walk flash attention (no gathered K/V view)"),
         # rmsnorm
         ("rmsnorm", "ref", ref.rmsnorm_ref, "jnp oracle"),
         ("rmsnorm", "xla", ref.rmsnorm_ref, "XLA rmsnorm"),
@@ -70,9 +78,13 @@ SHELF_IMPL_PAIRS = tuple((block, target) for block, target, _ in _SHELF_IMPLS)
 
 #: Registration-time hash of the shelf sources, stamped into the PlanStore
 #: environment fingerprint so a kernel rewrite invalidates stored plans.
-#: Snapshotted from the registration list itself — NOT from live registry
-#: state, which is import-order dependent (e.g. repro.models.attention
-#: re-registers attention/xla at import time).
+#: Snapshotted from the registration list itself.  Registration is now
+#: idempotent and import-order independent: every shelf target (including
+#: attention/xla, which historically ``repro.models.attention``
+#: re-registered at import time) is registered here, once, from its own
+#: kernel module — re-importing any module re-registers identical
+#: callables, so live registry state matches this snapshot regardless of
+#: which package was imported first.
 SHELF_FINGERPRINT = blocks.implementations_fingerprint(_SHELF_IMPLS)
 
 
@@ -93,6 +105,13 @@ def _legality_metadata() -> dict[tuple[str, str], TargetConstraints]:
         out[(block, "ref")] = anywhere
         out[(block, "xla")] = anywhere
         out[(block, "pallas")] = pallas_f32
+    out[("paged_attention", "xla")] = anywhere
+    out[("paged_attention", "pallas")] = TargetConstraints(
+        requires_platform=("tpu",),
+        dtypes=("float32", "bfloat16"),
+        notes="fused page-walk Mosaic kernel; scalar-prefetch page table; "
+              "interpret mode is the CPU-CI parity path",
+    )
     out[("fft2d", "xla")] = anywhere
     out[("fft2d", "pallas")] = TargetConstraints(
         requires_platform=("tpu",),
@@ -133,6 +152,21 @@ def _resource_metadata() -> dict[tuple[str, str], ResourceHint]:
     out[("attention", "pallas")] = ResourceHint(
         vmem_tile_bytes=5 * tile * tile * f32,
         notes="q tile + streamed k/v tiles + acc + running stats",
+    )
+    # xla paged target: the page walk materialises the gathered
+    # (B, max_pages * page_size) K/V view — roughly one extra cache-sized
+    # copy per K/V leaf live in the decode program
+    out[("paged_attention", "xla")] = ResourceHint(
+        memory_multiplier=1.5,
+        notes="gathered per-slot K/V view materialised per decode step",
+    )
+    # fused kernel: NO gather multiplier — the working set is the q rows
+    # plus one (page_size, head_dim) block per K/V operand plus the
+    # online-softmax scratch, all VMEM-resident per grid step
+    out[("paged_attention", "pallas")] = ResourceHint(
+        vmem_tile_bytes=4 * tile * tile * f32,
+        notes="q rows + one K/V page block per operand + acc/stats "
+              "scratch; no gathered view",
     )
     out[("rmsnorm", "pallas")] = ResourceHint(
         vmem_tile_bytes=2 * tile * tile * f32,

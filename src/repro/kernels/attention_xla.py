@@ -1,0 +1,189 @@
+"""Chunked full-sequence attention — the memory-safe XLA formulation.
+
+Flash-attention forward AND backward in jnp, with *static* chunk loops:
+  * naive autodiff through attention stacks the full S^2 probability
+    matrix per layer — the custom_vjp recomputes probability blocks in the
+    backward from the saved (q, k, v, out, lse) instead;
+  * chunk iteration is a Python loop over statically-sliced blocks, NOT a
+    lax.scan over dynamic slices: GSPMD cannot partition a dynamic slice
+    whose sliced axis is sharded and falls back to fully replicating the
+    operand (hundreds of GB at 128 heads x 4k seq).  Static slices keep
+    every block sharded.
+Chunk size adapts so there are at most 8 chunks per axis (<=64 blocks).
+
+This module lives on the kernel shelf (not in ``repro.models``) so the
+``("attention", "xla")`` registration in :mod:`repro.kernels` is the one
+source of truth — shelf snapshots no longer depend on whether
+``repro.models.attention`` happened to be imported first.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+
+def _chunks(s: int, target: int = 1024, max_chunks: int = 8) -> int:
+    c = max(target, -(-s // max_chunks))
+    c = min(c, s)
+    while s % c:
+        c += 1
+    return c
+
+
+# precision of the attention score blocks: "f32" (default) or "bf16"
+# (halves the dominant HBM traffic of the XLA attention path; stats and
+# accumulation stay f32) — a dry-run hillclimb knob.
+CHUNKED_SCORES_DTYPE = "float32"
+
+
+def _p_block(qc_scaled, lsec, kcf, qpos, kpos, causal):
+    if CHUNKED_SCORES_DTYPE == "bfloat16":
+        s = jnp.einsum(
+            "bkgqd,bksd->bkgqs",
+            qc_scaled.astype(jnp.bfloat16),
+            kcf.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+    else:
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qc_scaled, kcf)
+    if causal:
+        mask = (qpos[:, None] >= kpos[None, :])[None, None, None]
+        s = jnp.where(mask, s, _NEG)
+    return s, jnp.exp(s - lsec[..., None])
+
+
+def _chunked_fwd_core(q, k, v, causal: bool, q_chunk: int, kv_chunk: int):
+    """Returns (out (B,KH,G,Sq,Dv) f32, lse (B,KH,G,Sq))."""
+    b, h, sq, dk = q.shape
+    _, kh, skv, dv = v.shape
+    g = h // kh
+    nq = sq // q_chunk
+    nk = skv // kv_chunk
+    scale = 1.0 / (dk ** 0.5)
+    qg = q.reshape(b, kh, g, sq, dk)
+    off = skv - sq  # align sequence ends (cached prefix)
+
+    outs = []
+    lses = []
+    for qi in range(nq):
+        qc = qg[:, :, :, qi * q_chunk : (qi + 1) * q_chunk, :]
+        qc = qc.astype(jnp.float32) * scale
+        qpos = off + qi * q_chunk + jnp.arange(q_chunk)
+        m_acc = jnp.full((b, kh, g, q_chunk), _NEG, jnp.float32)
+        l_acc = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        o_acc = jnp.zeros((b, kh, g, q_chunk, dv), jnp.float32)
+        for ki in range(nk):
+            if causal and ki * kv_chunk > off + (qi + 1) * q_chunk - 1:
+                continue  # block fully above the diagonal
+            kc = k[:, :, ki * kv_chunk : (ki + 1) * kv_chunk, :]
+            vc = v[:, :, ki * kv_chunk : (ki + 1) * kv_chunk, :]
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            s, _ = _p_block(qc, jnp.zeros_like(m_acc), kc.astype(jnp.float32),
+                            qpos, kpos, causal)
+            m_cur = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m_acc, m_cur)
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_acc - m_new)
+            l_acc = l_acc * alpha + jnp.sum(p, axis=-1)
+            o_acc = o_acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p, vc.astype(jnp.float32)
+            )
+            m_acc = m_new
+        l_safe = jnp.where(l_acc == 0.0, 1.0, l_acc)
+        outs.append(o_acc / l_safe[..., None])
+        lses.append(m_acc + jnp.log(l_safe))
+    out = jnp.concatenate(outs, axis=3) if nq > 1 else outs[0]
+    lse = jnp.concatenate(lses, axis=3) if nq > 1 else lses[0]
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _attention_chunked_core(q, k, v, causal, q_chunk, kv_chunk):
+    out, _ = _chunked_fwd_core(q, k, v, causal, q_chunk, kv_chunk)
+    b, h, sq, _ = q.shape
+    return out.reshape(b, h, sq, -1).astype(q.dtype)
+
+
+def _core_fwd(q, k, v, causal, q_chunk, kv_chunk):
+    out, lse = _chunked_fwd_core(q, k, v, causal, q_chunk, kv_chunk)
+    b, h, sq, _ = q.shape
+    res = (q, k, v, out, lse)
+    return out.reshape(b, h, sq, -1).astype(q.dtype), res
+
+
+def _core_bwd(causal, q_chunk, kv_chunk, res, do):
+    q, k, v, out, lse = res  # out/lse grouped (B,KH,G,Sq,*)
+    b, h, sq, dk = q.shape
+    _, kh, skv, dv = v.shape
+    g = h // kh
+    nq = sq // q_chunk
+    nk = skv // kv_chunk
+    scale = 1.0 / (dk ** 0.5)
+    qg = q.reshape(b, kh, g, sq, dk).astype(jnp.float32)
+    dog = do.reshape(b, kh, g, sq, dv).astype(jnp.float32)
+    off = skv - sq
+    dsum = jnp.sum(dog * out, axis=-1)  # (B,KH,G,Sq)
+
+    dq_parts = []
+    dk_parts = [jnp.zeros((b, kh, kv_chunk, dk), jnp.float32) for _ in range(nk)]
+    dv_parts = [jnp.zeros((b, kh, kv_chunk, dv), jnp.float32) for _ in range(nk)]
+    for qi in range(nq):
+        sl = slice(qi * q_chunk, (qi + 1) * q_chunk)
+        qc = qg[:, :, :, sl, :] * scale
+        doc = dog[:, :, :, sl, :]
+        lsec = lse[:, :, :, sl]
+        dsc = dsum[:, :, :, sl]
+        qpos = off + qi * q_chunk + jnp.arange(q_chunk)
+        dq_acc = jnp.zeros((b, kh, g, q_chunk, dk), jnp.float32)
+        for ki in range(nk):
+            if causal and ki * kv_chunk > off + (qi + 1) * q_chunk - 1:
+                continue
+            ksl = slice(ki * kv_chunk, (ki + 1) * kv_chunk)
+            kcf = k[:, :, ksl, :].astype(jnp.float32)
+            vcf = v[:, :, ksl, :].astype(jnp.float32)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            _, p = _p_block(qc, lsec, kcf, qpos, kpos, causal)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doc, vcf)
+            ds = p * (dp - dsc[..., None])
+            dq_acc = dq_acc + jnp.einsum("bkgqs,bksd->bkgqd", ds, kcf) * scale
+            dk_parts[ki] = dk_parts[ki] + jnp.einsum(
+                "bkgqs,bkgqd->bksd", ds, qc
+            )  # qc already carries the 1/sqrt(d) factor
+            dv_parts[ki] = dv_parts[ki] + jnp.einsum("bkgqs,bkgqd->bksd", p, doc)
+        dq_parts.append(dq_acc)
+
+    dq = (jnp.concatenate(dq_parts, axis=3) if nq > 1 else dq_parts[0])
+    dk_full = jnp.concatenate(dk_parts, axis=2) if nk > 1 else dk_parts[0]
+    dv_full = jnp.concatenate(dv_parts, axis=2) if nk > 1 else dv_parts[0]
+    return (
+        dq.reshape(b, h, sq, dk).astype(q.dtype),
+        dk_full.astype(k.dtype),
+        dv_full.astype(v.dtype),
+    )
+
+
+_attention_chunked_core.defvjp(_core_fwd, _core_bwd)
+
+
+def attention_chunked(
+    q: jax.Array,  # (B, H, Sq, Dk)
+    k: jax.Array,  # (B, KH, Skv, Dk)
+    v: jax.Array,  # (B, KH, Skv, Dv)
+    causal: bool = True,
+    q_chunk: int | None = None,
+    kv_chunk: int | None = None,
+) -> jax.Array:
+    sq = q.shape[2]
+    skv = k.shape[2]
+    q_chunk = q_chunk or _chunks(sq)
+    kv_chunk = kv_chunk or _chunks(skv)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    if sq % q_chunk or skv % kv_chunk:
+        raise ValueError("sequence lengths must tile by attention chunks")
+    return _attention_chunked_core(q, k, v, causal, q_chunk, kv_chunk)

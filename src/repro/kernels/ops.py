@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.attention import flash_attention_pallas
+from repro.kernels import paged_attention as _paged
 from repro.kernels.fft import dft_matrix, fft2d_pallas
 from repro.kernels.lu import lu_blocked
 from repro.kernels.matmul import matmul_pallas, schur_update_pallas
@@ -157,6 +158,33 @@ def flash_attention(
     if _auto_backend(backend) == "pallas" and q.shape[2] > 1:
         return flash_attention_pallas(q, k, v, causal=causal, interpret=interpret)
     return _ref.attention_ref(q, k, v, causal=causal)
+
+
+def paged_attention(
+    q, k_pool, v_pool, pages, index, *, q_rope=None, kr_pool=None,
+    scale: float | None = None, backend: str | None = None,
+    interpret: bool | None = None,
+):
+    """Paged decode/extend attention through the page table.
+
+    pallas: the fused page-walk kernel (no gathered K/V view); xla: the
+    rolled gather + dense masked softmax.  When the pallas target is
+    *forced* off-TPU (``backend="pallas"`` on this CPU container, e.g. a
+    serve run with ``--decode-impl pallas``), ``interpret`` defaults on so
+    the kernel body runs in Python — the parity path CPU CI proves
+    token-identical.  On TPU the compiled Mosaic kernel runs as-is.
+    """
+    if _auto_backend(backend) == "pallas":
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        return _paged.paged_attention_pallas(
+            q, k_pool, v_pool, pages, index, q_rope=q_rope, kr_pool=kr_pool,
+            scale=scale, interpret=interpret,
+        )
+    return _paged.paged_attention_xla(
+        q, k_pool, v_pool, pages, index, q_rope=q_rope, kr_pool=kr_pool,
+        scale=scale,
+    )
 
 
 # -- rmsnorm ---------------------------------------------------------------------

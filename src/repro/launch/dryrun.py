@@ -106,7 +106,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
     """
     import dataclasses as _dc
 
-    from repro.models import attention as _attn
+    from repro.kernels import attention_xla as _attn_xla
 
     ov = dict(overrides or {})
     cfg = get_config(arch)
@@ -118,7 +118,9 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
     }
     if cfg_fields:
         cfg = _dc.replace(cfg, **cfg_fields)
-    _attn.CHUNKED_SCORES_DTYPE = ov.pop("scores_dtype", "float32")
+    # the knob lives on the module that reads it (the chunked kernel moved
+    # to the shelf), mirroring _kref.RMSNORM_PRECISION below
+    _attn_xla.CHUNKED_SCORES_DTYPE = ov.pop("scores_dtype", "float32")
     from repro.kernels import ref as _kref
     _kref.RMSNORM_PRECISION = ov.pop("norm_precision", "full")
     from repro.models import layers as _lay

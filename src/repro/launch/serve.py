@@ -102,6 +102,7 @@ def build_engine(args: argparse.Namespace) -> ServeEngine:
         prefill_chunk=args.prefill_chunk,
         page_size=args.page_size,
         n_pages=args.n_pages,
+        decode_impl=args.decode_impl,
         kv_validate=args.kv_validate,
         tracer=tracer,
         seed=args.seed,
@@ -174,6 +175,13 @@ def add_engine_args(ap: argparse.ArgumentParser) -> None:
                     help="KV pool size in pages (default: capacity-"
                          "equivalent, slots * ceil(max_len/page_size); "
                          "smaller over-commits — preemption reclaims)")
+    ap.add_argument("--decode-impl", default="auto",
+                    choices=("auto", "xla", "pallas"),
+                    help="pin the paged_attention binding for the decode "
+                         "hot loop (requires --page-size): xla = rolled "
+                         "page-walk gather, pallas = fused page-walk "
+                         "kernel (interpret-mode off-TPU); auto defers to "
+                         "the stored decode plan / default preference")
     ap.add_argument("--kv-validate", action="store_true",
                     help="run the repro.analysis page-aliasing sanitizer "
                          "after every page-table mutation (debug mode; "

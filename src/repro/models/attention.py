@@ -17,6 +17,20 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import blocks
+
+# chunked attention lives on the kernel shelf now (registered there as
+# ("attention", "xla") — import-order independent); re-exported for
+# backward compatibility
+from repro.kernels.attention_xla import attention_chunked  # noqa: F401
+
+# page-table plumbing shared by both paged_attention shelf targets and the
+# serve engine's page insert; re-exported from the kernel layer
+from repro.kernels.paged_attention import (  # noqa: F401
+    gather_kv_pages,
+    insert_pages,
+    scatter_chunk_pages,
+    scatter_token_pages,
+)
 from repro.models.layers import rmsnorm, rope, tp_out_einsum
 from repro.models.params import ParamMeta
 from repro.sharding.utils import constrain
@@ -113,197 +127,6 @@ def cache_seq_axes(cfg: ArchConfig) -> dict:
     }
 
 
-# -- chunked full-sequence attention (the memory-safe XLA formulation) ---------
-#
-# Flash-attention forward AND backward in jnp, with *static* chunk loops:
-#   * naive autodiff through attention stacks the full S^2 probability
-#     matrix per layer — the custom_vjp recomputes probability blocks in the
-#     backward from the saved (q, k, v, out, lse) instead;
-#   * chunk iteration is a Python loop over statically-sliced blocks, NOT a
-#     lax.scan over dynamic slices: GSPMD cannot partition a dynamic slice
-#     whose sliced axis is sharded and falls back to fully replicating the
-#     operand (hundreds of GB at 128 heads x 4k seq).  Static slices keep
-#     every block sharded.
-# Chunk size adapts so there are at most 8 chunks per axis (<=64 blocks).
-
-
-import functools
-
-
-def _chunks(s: int, target: int = 1024, max_chunks: int = 8) -> int:
-    c = max(target, -(-s // max_chunks))
-    c = min(c, s)
-    while s % c:
-        c += 1
-    return c
-
-
-# precision of the attention score blocks: "f32" (default) or "bf16"
-# (halves the dominant HBM traffic of the XLA attention path; stats and
-# accumulation stay f32) — a dry-run hillclimb knob.
-CHUNKED_SCORES_DTYPE = "float32"
-
-
-def _p_block(qc_scaled, lsec, kcf, qpos, kpos, causal):
-    if CHUNKED_SCORES_DTYPE == "bfloat16":
-        s = jnp.einsum(
-            "bkgqd,bksd->bkgqs",
-            qc_scaled.astype(jnp.bfloat16),
-            kcf.astype(jnp.bfloat16),
-            preferred_element_type=jnp.float32,
-        )
-    else:
-        s = jnp.einsum("bkgqd,bksd->bkgqs", qc_scaled, kcf)
-    if causal:
-        mask = (qpos[:, None] >= kpos[None, :])[None, None, None]
-        s = jnp.where(mask, s, _NEG)
-    return s, jnp.exp(s - lsec[..., None])
-
-
-def _chunked_fwd_core(q, k, v, causal: bool, q_chunk: int, kv_chunk: int):
-    """Returns (out (B,KH,G,Sq,Dv) f32, lse (B,KH,G,Sq))."""
-    b, h, sq, dk = q.shape
-    _, kh, skv, dv = v.shape
-    g = h // kh
-    nq = sq // q_chunk
-    nk = skv // kv_chunk
-    scale = 1.0 / (dk ** 0.5)
-    qg = q.reshape(b, kh, g, sq, dk)
-    off = skv - sq  # align sequence ends (cached prefix)
-
-    outs = []
-    lses = []
-    for qi in range(nq):
-        qc = qg[:, :, :, qi * q_chunk : (qi + 1) * q_chunk, :]
-        qc = qc.astype(jnp.float32) * scale
-        qpos = off + qi * q_chunk + jnp.arange(q_chunk)
-        m_acc = jnp.full((b, kh, g, q_chunk), _NEG, jnp.float32)
-        l_acc = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
-        o_acc = jnp.zeros((b, kh, g, q_chunk, dv), jnp.float32)
-        for ki in range(nk):
-            if causal and ki * kv_chunk > off + (qi + 1) * q_chunk - 1:
-                continue  # block fully above the diagonal
-            kc = k[:, :, ki * kv_chunk : (ki + 1) * kv_chunk, :]
-            vc = v[:, :, ki * kv_chunk : (ki + 1) * kv_chunk, :]
-            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
-            s, _ = _p_block(qc, jnp.zeros_like(m_acc), kc.astype(jnp.float32),
-                            qpos, kpos, causal)
-            m_cur = jnp.max(s, axis=-1)
-            m_new = jnp.maximum(m_acc, m_cur)
-            p = jnp.exp(s - m_new[..., None])
-            alpha = jnp.exp(m_acc - m_new)
-            l_acc = l_acc * alpha + jnp.sum(p, axis=-1)
-            o_acc = o_acc * alpha[..., None] + jnp.einsum(
-                "bkgqs,bksd->bkgqd", p, vc.astype(jnp.float32)
-            )
-            m_acc = m_new
-        l_safe = jnp.where(l_acc == 0.0, 1.0, l_acc)
-        outs.append(o_acc / l_safe[..., None])
-        lses.append(m_acc + jnp.log(l_safe))
-    out = jnp.concatenate(outs, axis=3) if nq > 1 else outs[0]
-    lse = jnp.concatenate(lses, axis=3) if nq > 1 else lses[0]
-    return out, lse
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def _attention_chunked_core(q, k, v, causal, q_chunk, kv_chunk):
-    out, _ = _chunked_fwd_core(q, k, v, causal, q_chunk, kv_chunk)
-    b, h, sq, _ = q.shape
-    return out.reshape(b, h, sq, -1).astype(q.dtype)
-
-
-def _core_fwd(q, k, v, causal, q_chunk, kv_chunk):
-    out, lse = _chunked_fwd_core(q, k, v, causal, q_chunk, kv_chunk)
-    b, h, sq, _ = q.shape
-    res = (q, k, v, out, lse)
-    return out.reshape(b, h, sq, -1).astype(q.dtype), res
-
-
-def _core_bwd(causal, q_chunk, kv_chunk, res, do):
-    q, k, v, out, lse = res  # out/lse grouped (B,KH,G,Sq,*)
-    b, h, sq, dk = q.shape
-    _, kh, skv, dv = v.shape
-    g = h // kh
-    nq = sq // q_chunk
-    nk = skv // kv_chunk
-    scale = 1.0 / (dk ** 0.5)
-    qg = q.reshape(b, kh, g, sq, dk).astype(jnp.float32)
-    dog = do.reshape(b, kh, g, sq, dv).astype(jnp.float32)
-    off = skv - sq
-    dsum = jnp.sum(dog * out, axis=-1)  # (B,KH,G,Sq)
-
-    dq_parts = []
-    dk_parts = [jnp.zeros((b, kh, kv_chunk, dk), jnp.float32) for _ in range(nk)]
-    dv_parts = [jnp.zeros((b, kh, kv_chunk, dv), jnp.float32) for _ in range(nk)]
-    for qi in range(nq):
-        sl = slice(qi * q_chunk, (qi + 1) * q_chunk)
-        qc = qg[:, :, :, sl, :] * scale
-        doc = dog[:, :, :, sl, :]
-        lsec = lse[:, :, :, sl]
-        dsc = dsum[:, :, :, sl]
-        qpos = off + qi * q_chunk + jnp.arange(q_chunk)
-        dq_acc = jnp.zeros((b, kh, g, q_chunk, dk), jnp.float32)
-        for ki in range(nk):
-            if causal and ki * kv_chunk > off + (qi + 1) * q_chunk - 1:
-                continue
-            ksl = slice(ki * kv_chunk, (ki + 1) * kv_chunk)
-            kcf = k[:, :, ksl, :].astype(jnp.float32)
-            vcf = v[:, :, ksl, :].astype(jnp.float32)
-            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
-            _, p = _p_block(qc, lsec, kcf, qpos, kpos, causal)
-            dp = jnp.einsum("bkgqd,bksd->bkgqs", doc, vcf)
-            ds = p * (dp - dsc[..., None])
-            dq_acc = dq_acc + jnp.einsum("bkgqs,bksd->bkgqd", ds, kcf) * scale
-            dk_parts[ki] = dk_parts[ki] + jnp.einsum(
-                "bkgqs,bkgqd->bksd", ds, qc
-            )  # qc already carries the 1/sqrt(d) factor
-            dv_parts[ki] = dv_parts[ki] + jnp.einsum("bkgqs,bkgqd->bksd", p, doc)
-        dq_parts.append(dq_acc)
-
-    dq = (jnp.concatenate(dq_parts, axis=3) if nq > 1 else dq_parts[0])
-    dk_full = jnp.concatenate(dk_parts, axis=2) if nk > 1 else dk_parts[0]
-    dv_full = jnp.concatenate(dv_parts, axis=2) if nk > 1 else dv_parts[0]
-    return (
-        dq.reshape(b, h, sq, dk).astype(q.dtype),
-        dk_full.astype(k.dtype),
-        dv_full.astype(v.dtype),
-    )
-
-
-_attention_chunked_core.defvjp(_core_fwd, _core_bwd)
-
-
-def attention_chunked(
-    q: jax.Array,  # (B, H, Sq, Dk)
-    k: jax.Array,  # (B, KH, Skv, Dk)
-    v: jax.Array,  # (B, KH, Skv, Dv)
-    causal: bool = True,
-    q_chunk: int | None = None,
-    kv_chunk: int | None = None,
-) -> jax.Array:
-    sq = q.shape[2]
-    skv = k.shape[2]
-    q_chunk = q_chunk or _chunks(sq)
-    kv_chunk = kv_chunk or _chunks(skv)
-    q_chunk = min(q_chunk, sq)
-    kv_chunk = min(kv_chunk, skv)
-    if sq % q_chunk or skv % kv_chunk:
-        raise ValueError("sequence lengths must tile by attention chunks")
-    return _attention_chunked_core(q, k, v, causal, q_chunk, kv_chunk)
-
-
-def _register_chunked() -> None:
-    from repro.core.blocks import registry
-
-    registry.register(
-        "attention", "xla", attention_chunked,
-        "chunked online-softmax attention (memory-safe at long context)",
-    )
-
-
-_register_chunked()
-
-
 # -- decode attention over a cache ----------------------------------------------
 #
 # ``index`` is per-slot: shape (B,), the write position of the *first* new
@@ -327,79 +150,6 @@ def _update_slot_rows(cache: jax.Array, update: jax.Array, index: jax.Array,
             c, u, i, axis=axis - 1
         )
     )(cache, update, index)
-
-
-# -- page-table indirection (the paged KV pool) ---------------------------------
-#
-# Pool leaves share the contiguous leaf's rank: batch axis -> page axis
-# (``n_pages + 1``; the last page is the null page freed/prefilling slots
-# scatter into), sequence axis -> one page of ``page_size`` rows.
-# ``pages`` is the (B, max_pages) int32 page table; a slot's logical
-# position ``t`` lives in page ``pages[b, t // page_size]`` at row
-# ``t % page_size``.  Entries past a slot's allocation point at the null
-# page, so the gathered view is garbage there — always masked, because the
-# valid mask admits only ``t <= index``.
-
-
-def gather_kv_pages(
-    pool: jax.Array, pages: jax.Array, seq_axis: int
-) -> jax.Array:
-    """Gather a per-slot contiguous K/V view from the page pool.
-
-    ``pool`` (P_total, ..., page_size @ seq_axis, ...), ``pages``
-    (B, max_pages) -> (B, ..., max_pages * page_size @ seq_axis, ...).
-    """
-    g = pool[pages]  # (B, max_pages) + pool.shape[1:]
-    g = jnp.moveaxis(g, 1, seq_axis)  # page axis lands beside the page rows
-    shp = g.shape
-    return g.reshape(
-        shp[:seq_axis]
-        + (shp[seq_axis] * shp[seq_axis + 1],)
-        + shp[seq_axis + 2 :]
-    )
-
-
-def scatter_token_pages(
-    pool: jax.Array,
-    val: jax.Array,
-    pages: jax.Array,
-    index: jax.Array,
-    seq_axis: int,
-) -> jax.Array:
-    """Scatter each row's new token into its current page.
-
-    ``val`` is the token slice with the sequence axis squeezed out (GQA
-    (B, KH, D), MLA (B, r)); ``index`` (B,) is the logical write position.
-    Rows whose table entry is the null page (freed slots, slots still
-    prefilling) write into the sacrificial page.
-    """
-    ps = pool.shape[seq_axis]
-    pid = jnp.take_along_axis(
-        pages, (index[:, None] // ps).astype(jnp.int32), axis=1, mode="clip"
-    )[:, 0]
-    off = index % ps
-    idx = (pid,) + (slice(None),) * (seq_axis - 1) + (off,)
-    return pool.at[idx].set(val.astype(pool.dtype))
-
-
-def insert_pages(
-    pool: jax.Array, b1: jax.Array, page_ids: jax.Array, seq_axis: int
-) -> jax.Array:
-    """Scatter a prefilled batch-1 slot cache into the pool as whole pages.
-
-    ``pool`` (L, P_total, ..., page_size, ...), ``b1`` (L, 1, ..., S, ...)
-    with ``S == max_pages * page_size``; ``page_ids`` (max_pages,) is the
-    slot's page list, null-page entries absorbing the unallocated tail.
-    ``seq_axis`` positions are per-layer (batch leading), as from
-    :func:`cache_seq_axes`.
-    """
-    ps = pool.shape[seq_axis + 1]
-    x = jnp.squeeze(b1, axis=1)  # (L, ..., S, ...): seq back at seq_axis
-    shp = x.shape
-    n = shp[seq_axis] // ps
-    x = x.reshape(shp[:seq_axis] + (n, ps) + shp[seq_axis + 1 :])
-    x = jnp.moveaxis(x, seq_axis, 1)  # (L, max_pages, ..., ps, ...)
-    return pool.at[:, page_ids].set(x.astype(pool.dtype))
 
 
 def decode_attention_gqa(
@@ -456,19 +206,27 @@ def gqa_forward(
     if mode in ("decode", "extend"):
         assert cache is not None and index is not None
         if pages is not None:
-            if s != 1:
-                raise ValueError(
-                    "paged attention writes one token per step; chunked "
-                    "prefill extends the contiguous slot cache, not the pool"
+            if s == 1:
+                k_cache = scatter_token_pages(
+                    cache["k"], kt[:, :, 0, :], pages, index, seq_axis=2
                 )
-            k_cache = scatter_token_pages(
-                cache["k"], kt[:, :, 0, :], pages, index, seq_axis=2
+                v_cache = scatter_token_pages(
+                    cache["v"], vt[:, :, 0, :], pages, index, seq_axis=2
+                )
+            else:  # extend: S-token chunk, causal within the chunk
+                k_cache = scatter_chunk_pages(
+                    cache["k"], kt, pages, index, seq_axis=2
+                )
+                v_cache = scatter_chunk_pages(
+                    cache["v"], vt, pages, index, seq_axis=2
+                )
+            # the attention read is a planner-searchable function block:
+            # xla = rolled page-walk gather + dense softmax, pallas = the
+            # fused page-walk kernel (no gathered view)
+            o = blocks.call(
+                "paged_attention", qt, k_cache, v_cache, pages, index
             )
-            v_cache = scatter_token_pages(
-                cache["v"], vt[:, :, 0, :], pages, index, seq_axis=2
-            )
-            k_view = gather_kv_pages(k_cache, pages, seq_axis=2)
-            v_view = gather_kv_pages(v_cache, pages, seq_axis=2)
+            new_cache = {"k": k_cache, "v": v_cache}
         else:
             k_cache = _update_slot_rows(
                 cache["k"], kt.astype(cache["k"].dtype), index, axis=2
@@ -476,9 +234,8 @@ def gqa_forward(
             v_cache = _update_slot_rows(
                 cache["v"], vt.astype(cache["v"].dtype), index, axis=2
             )
-            k_view, v_view = k_cache, v_cache
-        o = decode_attention_gqa(qt, k_view, v_view, index)
-        new_cache = {"k": k_cache, "v": v_cache}
+            o = decode_attention_gqa(qt, k_cache, v_cache, index)
+            new_cache = {"k": k_cache, "v": v_cache}
     else:
         o = blocks.call("attention", qt, kt, vt, causal=True)
         new_cache = None
@@ -529,20 +286,37 @@ def mla_forward(
 
     if mode in ("decode", "extend"):
         assert cache is not None and index is not None
+        # absorbed decode: score = q_abs . c  +  qr . kr — structurally
+        # GQA with one KV head whose keys/values are the latent cache
+        w_uk = p["w_uk"].astype(cd).reshape(m.kv_lora_rank, h, dn)
+        q_abs = jnp.einsum("bshn,rhn->bshr", qn, w_uk)  # (B,S,H,r)
+        scale = 1.0 / ((dn + dr) ** 0.5)
         if pages is not None:
-            if s != 1:
-                raise ValueError(
-                    "paged attention writes one token per step; chunked "
-                    "prefill extends the contiguous slot cache, not the pool"
+            if s == 1:
+                c_cache = scatter_token_pages(
+                    cache["c"], c[:, 0, :], pages, index, seq_axis=1
                 )
-            c_cache = scatter_token_pages(
-                cache["c"], c[:, 0, :], pages, index, seq_axis=1
+                kr_cache = scatter_token_pages(
+                    cache["kr"], kr[:, 0, 0, :], pages, index, seq_axis=1
+                )
+            else:  # extend chunk
+                c_cache = scatter_chunk_pages(
+                    cache["c"], c, pages, index, seq_axis=1
+                )
+                kr_cache = scatter_chunk_pages(
+                    cache["kr"], kr[:, :, 0, :], pages, index, seq_axis=1
+                )
+            ctx = blocks.call(
+                "paged_attention",
+                jnp.swapaxes(q_abs, 1, 2),  # (B,H,S,r)
+                c_cache[:, None],  # latent pool as 1-KV-head (P,1,ps,r)
+                c_cache[:, None],  # ...and it doubles as the value pool
+                pages, index,
+                q_rope=jnp.swapaxes(qr, 1, 2),  # (B,H,S,dr)
+                kr_pool=kr_cache[:, None],
+                scale=scale,
             )
-            kr_cache = scatter_token_pages(
-                cache["kr"], kr[:, 0, 0, :], pages, index, seq_axis=1
-            )
-            c_view = gather_kv_pages(c_cache, pages, seq_axis=1)
-            kr_view = gather_kv_pages(kr_cache, pages, seq_axis=1)
+            ctx = jnp.swapaxes(ctx, 1, 2)  # (B,S,H,r)
         else:
             c_cache = _update_slot_rows(
                 cache["c"], c.astype(cache["c"].dtype), index, axis=1
@@ -552,30 +326,26 @@ def mla_forward(
                 axis=1,
             )
             c_view, kr_view = c_cache, kr_cache
-        # absorbed decode: score = q_abs . c  +  qr . kr
-        w_uk = p["w_uk"].astype(cd).reshape(m.kv_lora_rank, h, dn)
-        q_abs = jnp.einsum("bshn,rhn->bshr", qn, w_uk)  # (B,S,H,r)
-        scale = 1.0 / ((dn + dr) ** 0.5)
-        s_nope = jnp.einsum(
-            "bshr,btr->bhst", q_abs.astype(jnp.float32),
-            c_view.astype(jnp.float32),
-        )
-        s_rope = jnp.einsum(
-            "bshr,btr->bhst", qr.astype(jnp.float32),
-            kr_view.astype(jnp.float32),
-        )
-        sc = (s_nope + s_rope) * scale  # (B,H,S,T)
-        smax = c_view.shape[1]
-        qpos = index[:, None] + jnp.arange(s)  # (B, S)
-        valid = (
-            jnp.arange(smax)[None, None, None, :]
-            <= qpos[:, None, :, None]
-        )
-        sc = jnp.where(valid, sc, _NEG)
-        pattn = jax.nn.softmax(sc, axis=-1)
-        ctx = jnp.einsum(
-            "bhst,btr->bshr", pattn, c_view.astype(jnp.float32)
-        )  # weighted latent
+            s_nope = jnp.einsum(
+                "bshr,btr->bhst", q_abs.astype(jnp.float32),
+                c_view.astype(jnp.float32),
+            )
+            s_rope = jnp.einsum(
+                "bshr,btr->bhst", qr.astype(jnp.float32),
+                kr_view.astype(jnp.float32),
+            )
+            sc = (s_nope + s_rope) * scale  # (B,H,S,T)
+            smax = c_view.shape[1]
+            qpos = index[:, None] + jnp.arange(s)  # (B, S)
+            valid = (
+                jnp.arange(smax)[None, None, None, :]
+                <= qpos[:, None, :, None]
+            )
+            sc = jnp.where(valid, sc, _NEG)
+            pattn = jax.nn.softmax(sc, axis=-1)
+            ctx = jnp.einsum(
+                "bhst,btr->bshr", pattn, c_view.astype(jnp.float32)
+            )  # weighted latent
         w_uv = p["w_uv"].astype(cd).reshape(m.kv_lora_rank, h, dv)
         o = jnp.einsum("bshr,rhv->bshv", ctx.astype(cd), w_uv)
         new_cache = {"c": c_cache, "kr": kr_cache}

@@ -39,6 +39,15 @@ _BLOCKS_BY_LAYER_KIND = {
     "m": ("rmsnorm", "ssd_scan"),
 }
 
+#: Extra blocks the *decode* cell exercises per layer kind: decode cells
+#: trace through the paged KV pool (the serving layout), so the hot-loop
+#: attention read is the planner-searchable paged_attention block.
+_DECODE_BLOCKS_BY_LAYER_KIND = {
+    "a": ("paged_attention",),
+    "d": ("paged_attention",),
+    "s": ("paged_attention",),
+}
+
 ZOO_KINDS = ("train", "prefill", "decode")
 
 
@@ -127,12 +136,19 @@ def _cell_blocks(
     cfg: Any,
     registry: Any,
     targets: Sequence[str] | None,
+    kind: str = "train",
 ) -> dict[str, list[str]]:
     """Axes for one cell: the blocks this arch's step actually exercises,
     restricted to the requested (and registered) targets."""
     wanted: list[str] = []
+    per_kind = dict(_BLOCKS_BY_LAYER_KIND)
+    if kind == "decode":
+        per_kind = {
+            k: v + _DECODE_BLOCKS_BY_LAYER_KIND.get(k, ())
+            for k, v in per_kind.items()
+        }
     for kind_char in dict.fromkeys(cfg.pattern()):
-        for b in _BLOCKS_BY_LAYER_KIND.get(kind_char, ()):
+        for b in per_kind.get(kind_char, ()):
             if b not in wanted:
                 wanted.append(b)
     out: dict[str, list[str]] = {}
@@ -214,11 +230,32 @@ def _cell_target(
         def builder():
             return jax.jit(lambda p, t, c: lm.decode_step(p, t, cfg, c))
 
-        args = (
-            params,
-            batch_tree["tokens"],
-            lm.init_cache(cfg, batch, seq),
-        )
+        # attention-family decode traces through the block-paged KV pool
+        # (the serving layout), so the cell's binding space includes the
+        # paged_attention hot-loop block; pure-SSM archs have no sequence
+        # axis to page and keep the contiguous state
+        if any(ch in "ads" for ch in cfg.pattern()):
+            import jax.numpy as jnp
+
+            page_size = max(1, min(8, seq))
+            max_pages = -(-seq // page_size)
+            cache = lm.init_cache(
+                cfg, batch, seq,
+                page_size=page_size, n_pages=batch * max_pages,
+            )
+            # identity table: slot b owns pages [b*mp, (b+1)*mp); ragged
+            # per-slot positions so the cell measures the staggered
+            # continuous-batching case, not the aligned one
+            cache = dict(
+                cache,
+                pages=jnp.arange(
+                    batch * max_pages, dtype=jnp.int32
+                ).reshape(batch, max_pages),
+                index=jnp.arange(batch, dtype=jnp.int32) % jnp.int32(seq),
+            )
+        else:
+            cache = lm.init_cache(cfg, batch, seq)
+        args = (params, batch_tree["tokens"], cache)
     else:
         raise ValueError(f"unknown cell kind '{kind}'; known: {ZOO_KINDS}")
     return builder, args, cfg
@@ -283,7 +320,7 @@ def plan_zoo(
                 arch, kind, reduced=reduced, layers=layers, batch=batch,
                 seq=seq, seed=seed,
             )
-            block_map = _cell_blocks(cfg, registry, targets)
+            block_map = _cell_blocks(cfg, registry, targets, kind)
             if not block_map:
                 if not quiet:
                     print(f"zoo cell {arch}:{kind}: no searchable blocks "

@@ -236,6 +236,7 @@ class ServeEngine:
         prefill_chunk: int | None = None,
         page_size: int | None = None,
         n_pages: int | None = None,
+        decode_impl: str = "auto",
         kv_validate: bool = False,
         monitor: StepMonitor | None = None,
         tracer: Tracer | None = None,
@@ -266,6 +267,16 @@ class ServeEngine:
             raise ValueError("prefill_chunk must be >= 1")
         if n_pages is not None and page_size is None:
             raise ValueError("n_pages given without page_size")
+        if decode_impl not in ("auto", "xla", "pallas"):
+            raise ValueError(
+                f"decode_impl must be auto|xla|pallas, got {decode_impl!r}"
+            )
+        if decode_impl != "auto" and page_size is None:
+            raise ValueError(
+                "decode_impl pins the paged_attention binding — it requires "
+                "the paged KV cache (page_size)"
+            )
+        self.decode_impl = decode_impl
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
@@ -397,6 +408,14 @@ class ServeEngine:
             elif mapping and not quiet:
                 print(f"serve: {phase} bound to plan '{key}': {mapping}")
             self._bindings[phase] = mapping
+        # an explicit decode_impl overrides whatever the stored decode plan
+        # (or the default preference order) would pick for the hot loop's
+        # paged_attention block; "auto" leaves the planner's choice alone
+        if decode_impl != "auto":
+            base = self._bindings.get("decode") or {}
+            self._bindings["decode"] = {
+                **base, "paged_attention": decode_impl,
+            }
 
         # the cache arguments are donated: the old cache is dead the moment
         # a step returns its successor, and without donation every decode

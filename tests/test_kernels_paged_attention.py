@@ -1,0 +1,369 @@
+"""Fused Pallas paged-attention block: parity, shelf metadata, planner
+search, and serve-level token identity.
+
+The parity tests run the fused kernel in interpret mode (the CPU-CI
+path) against an independent float64 dense oracle AND against the XLA
+gather-then-attend implementation, across decode (S=1) and extend (S>1)
+chunks, GQA and MLA layouts, ragged per-slot lengths, page boundaries,
+final partial pages and null-page table entries.  The integration tests
+pin the acceptance criteria: both shelf targets carry legality/resource
+metadata regardless of import order, the zoo decode search prunes the
+TPU-only kernel statically on CPU while still committing a plan that
+binds the block, the fused program's peak live bytes sit strictly below
+the gather path's at serving-scale shapes, and a served greedy trace is
+token-for-token identical under ``decode_impl="pallas"``.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.paged_attention import (
+    gather_kv_pages,
+    paged_attention_pallas,
+    paged_attention_xla,
+    scatter_chunk_pages,
+    scatter_token_pages,
+)
+from repro.serve import Request, ServeEngine
+
+CFG = get_config("llama3.2-1b").reduced()
+# token-identity comparisons across different decode programs: f32 keeps
+# greedy argmax ties deterministic (same convention as test_serve_kv)
+F32 = dataclasses.replace(CFG, compute_dtype="float32", remat="none")
+
+
+# -- paged operand builder + dense float64 oracle ------------------------------
+
+
+def _paged_case(rng, *, b, h, kh, s, dk, dv, ps, mp, lengths, dr=0):
+    """Identity-table paged operands with per-slot logical lengths.
+
+    ``lengths[i]`` is slot ``i``'s history length (== the first new-token
+    position); table entries past the pages needed to hold
+    ``lengths[i] + s`` tokens point at the null page, whose contents are
+    poisoned to catch any unmasked read.
+    """
+    n_pages = b * mp
+    null = n_pages
+    k_pool = rng.standard_normal((n_pages + 1, kh, ps, dk)).astype(np.float32)
+    v_pool = rng.standard_normal((n_pages + 1, kh, ps, dv)).astype(np.float32)
+    k_pool[null] = 1e6  # poison: masked rows must never contribute
+    v_pool[null] = 1e6
+    q = rng.standard_normal((b, h, s, dk)).astype(np.float32)
+    pages = np.arange(n_pages, dtype=np.int32).reshape(b, mp)
+    for i, ln in enumerate(lengths):
+        used = -(-(ln + s) // ps)
+        pages[i, used:] = null
+    index = np.asarray(lengths, np.int32)
+    case = {
+        "q": jnp.asarray(q),
+        "k_pool": jnp.asarray(k_pool),
+        "v_pool": jnp.asarray(v_pool),
+        "pages": jnp.asarray(pages),
+        "index": jnp.asarray(index),
+    }
+    if dr:
+        kr_pool = rng.standard_normal((n_pages + 1, 1, ps, dr))
+        kr_pool = kr_pool.astype(np.float32)
+        kr_pool[null] = 1e6
+        case["q_rope"] = jnp.asarray(
+            rng.standard_normal((b, h, s, dr)).astype(np.float32)
+        )
+        case["kr_pool"] = jnp.asarray(kr_pool)
+        case["scale"] = 1.0 / float(np.sqrt(dk + dr))
+    return case
+
+
+def _oracle(case):
+    """Dense float64 reference: gather every page, mask by position."""
+    q = np.asarray(case["q"], np.float64)
+    b, h, s, dk = q.shape
+    k_pool = np.asarray(case["k_pool"], np.float64)
+    v_pool = np.asarray(case["v_pool"], np.float64)
+    pages = np.asarray(case["pages"])
+    index = np.asarray(case["index"])
+    kh, ps = k_pool.shape[1], k_pool.shape[2]
+    g = h // kh
+
+    def view(pool):  # (b, mp, kh, ps, d) -> (b, kh, mp*ps, d)
+        v = pool[pages]
+        return np.moveaxis(v, 2, 1).reshape(b, kh, -1, pool.shape[-1])
+
+    kv, vv = view(k_pool), view(v_pool)
+    qg = q.reshape(b, kh, g, s, dk)
+    sc = np.einsum("bkgqd,bktd->bkgqt", qg, kv)
+    if "q_rope" in case:
+        qr = np.asarray(case["q_rope"], np.float64)
+        qr = qr.reshape(b, kh, g, s, -1)
+        sc = (sc + np.einsum(
+            "bkgqd,bktd->bkgqt", qr, view(np.asarray(case["kr_pool"],
+                                                     np.float64))
+        )) * case["scale"]
+    else:
+        sc = sc / np.sqrt(dk)
+    pos = np.arange(kv.shape[2])
+    qpos = index[:, None] + np.arange(s)
+    mask = pos[None, None, None, None, :] <= qpos[:, None, None, :, None]
+    sc = np.where(mask, sc, -np.inf)
+    p = np.exp(sc - sc.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = np.einsum("bkgqt,bktd->bkgqd", p, vv)
+    return o.reshape(b, h, s, v_pool.shape[-1])
+
+
+# lengths exercise: index 0 (empty history), a write landing exactly on a
+# page boundary, a final partial page, and a fully ragged mix
+GQA_CASES = [
+    # (s, lengths) with ps=8, mp=4
+    (1, (15, 8)),   # decode: last slot of page 2 / first slot of page 2
+    (1, (0, 31)),   # decode: empty history / final table slot
+    (4, (12, 0)),   # extend: mid-page / from scratch
+    (4, (6, 20)),   # extend: chunk crosses a page boundary
+]
+
+
+@pytest.mark.parametrize("s,lengths", GQA_CASES)
+def test_paged_parity_gqa(s, lengths, rng):
+    case = _paged_case(
+        rng, b=2, h=4, kh=2, s=s, dk=32, dv=32, ps=8, mp=4, lengths=lengths
+    )
+    want = _oracle(case)
+    got_xla = paged_attention_xla(**case)
+    got_pallas = paged_attention_pallas(**case, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_xla), want,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_pallas), want,
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("s,lengths", [(1, (15, 8)), (4, (6, 20))])
+def test_paged_parity_mla(s, lengths, rng):
+    # MLA layout: shared latent K/V (kh=1), decoupled rope scores folded
+    # in before the softmax, explicit 1/sqrt(dk+dr) scale
+    case = _paged_case(
+        rng, b=2, h=4, kh=1, s=s, dk=32, dv=32, ps=8, mp=4,
+        lengths=lengths, dr=16,
+    )
+    want = _oracle(case)
+    got_xla = paged_attention_xla(**case)
+    got_pallas = paged_attention_pallas(**case, interpret=True)
+    np.testing.assert_allclose(np.asarray(got_xla), want,
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_pallas), want,
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_paged_parity_uneven_final_page(rng):
+    # mp*ps leaves the final page partially filled at max length
+    case = _paged_case(
+        rng, b=2, h=4, kh=2, s=1, dk=32, dv=32, ps=8, mp=3,
+        lengths=(17, 23),
+    )
+    np.testing.assert_allclose(
+        np.asarray(paged_attention_pallas(**case, interpret=True)),
+        _oracle(case), rtol=1e-4, atol=1e-4,
+    )
+
+
+def test_paged_block_call_dispatches(rng):
+    # the registered shelf entries resolve to the same numerics
+    from repro.core import blocks
+
+    case = _paged_case(
+        rng, b=2, h=4, kh=2, s=1, dk=32, dv=32, ps=8, mp=2, lengths=(5, 9)
+    )
+    want = _oracle(case)
+    for target in ("xla", "pallas"):
+        with blocks.bind({"paged_attention": target}):
+            got = blocks.call("paged_attention", *(
+                case[k] for k in ("q", "k_pool", "v_pool", "pages", "index")
+            ))
+        np.testing.assert_allclose(np.asarray(got), want,
+                                   rtol=1e-4, atol=1e-4)
+
+
+# -- page walk + scatter helpers -----------------------------------------------
+
+
+@pytest.mark.parametrize("mp", [1, 4])
+def test_rolled_gather_matches_advanced_indexing(mp, rng):
+    pool = jnp.asarray(
+        rng.standard_normal((2 * mp + 1, 2, 8, 16)), jnp.float32
+    )
+    pages = jnp.asarray(
+        rng.integers(0, 2 * mp + 1, (2, mp)).astype(np.int32)
+    )
+    got = gather_kv_pages(pool, pages, seq_axis=2)
+    want = np.moveaxis(np.asarray(pool)[np.asarray(pages)], 2, 1)
+    want = want.reshape(2, 2, mp * 8, 16)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_scatter_chunk_matches_token_scatter(rng):
+    pool = jnp.zeros((5, 2, 4, 8), jnp.float32)
+    pages = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    index = jnp.asarray([3, 1], jnp.int32)  # chunk crosses a page boundary
+    val = jnp.asarray(rng.standard_normal((2, 2, 3, 8)), jnp.float32)
+    got = scatter_chunk_pages(pool, val, pages, index, seq_axis=2)
+    want = pool
+    for i in range(3):
+        want = scatter_token_pages(
+            want, val[:, :, i], pages, index + i, seq_axis=2
+        )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- shelf metadata: import-order independence + coverage ----------------------
+
+_SNAPSHOT_SRC = """
+import json
+{imports}
+from repro import kernels
+from repro.core import blocks
+
+print(json.dumps({{
+    "fingerprint": kernels.SHELF_FINGERPRINT,
+    "legality": sorted(",".join(k) for k in kernels.BLOCK_LEGALITY),
+    "resources": sorted(",".join(k) for k in kernels.BLOCK_RESOURCES),
+    "attention_xla_module": blocks.registry.implementation(
+        "attention", "xla").fn.__module__,
+    "paged_targets": sorted(blocks.registry.targets("paged_attention")),
+}}))
+"""
+
+
+def _shelf_snapshot(imports):
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")]
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", _SNAPSHOT_SRC.format(imports=imports)],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert out.returncode == 0, out.stderr
+    return json.loads(out.stdout)
+
+
+def test_shelf_independent_of_import_order():
+    """models.attention first vs kernels first must produce the same
+    shelf: same fingerprint, same metadata keys, and attention/xla
+    resolving to the kernels-owned implementation (the historical bug:
+    whichever module imported second silently re-registered it)."""
+    a = _shelf_snapshot("import repro.kernels\nimport repro.models.attention")
+    b = _shelf_snapshot("import repro.models.attention\nimport repro.kernels")
+    assert a == b
+    assert a["attention_xla_module"] == "repro.kernels.attention_xla"
+    assert "paged_attention,xla" in a["legality"]
+    assert "paged_attention,pallas" in a["legality"]
+    assert "paged_attention,xla" in a["resources"]
+    assert "paged_attention,pallas" in a["resources"]
+    assert a["paged_targets"] == ["pallas", "xla"]
+
+
+def test_shelf_coverage_lint_passes():
+    from repro.analysis.resources import lint_shelf_coverage
+
+    assert lint_shelf_coverage() == []
+
+
+def test_pallas_target_legality_is_tpu_only():
+    from repro import kernels
+
+    cons = kernels.BLOCK_LEGALITY[("paged_attention", "pallas")]
+    assert cons.requires_platform == ("tpu",)
+    # the gather path runs anywhere — it's the measured CPU baseline
+    assert not kernels.BLOCK_LEGALITY[
+        ("paged_attention", "xla")].requires_platform
+
+
+# -- static resources: fused walk beats the gathered view ----------------------
+
+
+def test_fused_decode_peak_live_bytes_below_gather():
+    """At serving-scale shapes the fused program's peak live bytes sit
+    strictly below the gather path's — the gathered per-slot K/V view is
+    the dominant decode intermediate, and the fused kernel never
+    materialises it."""
+    from repro.analysis.resources import estimate_memory
+    from repro.core import blocks
+    from repro.offload.zoo import _cell_target
+
+    builder, args, _ = _cell_target(
+        "llama3.2-1b", "decode", reduced=True, layers=2, batch=4,
+        seq=256, seed=0,
+    )
+    peaks = {}
+    for target in ("xla", "pallas"):
+        with blocks.bind({"paged_attention": target}):
+            peaks[target] = estimate_memory(builder(), *args).peak_live_bytes
+    assert peaks["pallas"] < peaks["xla"], peaks
+
+
+# -- planner: the decode cell searches the paged block -------------------------
+
+
+def test_zoo_decode_plan_searches_paged_block(tmp_path):
+    """The zoo decode cell exposes ``paged_attention`` as a search axis:
+    on CPU the legality pass prunes every pallas candidate statically
+    (the fused kernel is TPU-only), the measured winner binds the gather
+    implementation, and the committed plan records the block."""
+    from repro.offload.zoo import plan_zoo
+
+    results = plan_zoo(
+        str(tmp_path), [("llama3.2-1b", "decode")],
+        targets=("xla", "pallas"), reduced=True, layers=1, batch=2,
+        seq=8, legality=True,
+    )
+    r = results[("llama3.2-1b", "decode")]
+    assert r.mapping["paged_attention"] == "xla"
+    assert r.report is not None and r.report.pruned > 0
+
+
+# -- serve-level: --decode-impl forces the fused kernel ------------------------
+
+
+def _run_trace(engine, prompts, gens, max_steps=800):
+    ids = [
+        engine.submit(Request(p, max_new_tokens=g))
+        for p, g in zip(prompts, gens)
+    ]
+    engine.run_until_idle(max_steps=max_steps)
+    return [engine.completions[i].tokens for i in ids]
+
+
+def test_serve_decode_impl_token_identical(rng):
+    """A greedy paged trace under ``decode_impl="pallas"`` (interpret
+    mode on CPU) is token-for-token identical to the default binding —
+    the acceptance bar for trusting the fused kernel in the hot loop."""
+    prompts = [
+        rng.integers(0, CFG.vocab_size, n).tolist() for n in (5, 9, 4)
+    ]
+    gens = (6, 4, 5)
+    traces = {
+        impl: _run_trace(
+            ServeEngine(F32, n_slots=3, max_len=32, seed=0, page_size=4,
+                        decode_impl=impl),
+            prompts, gens,
+        )
+        for impl in ("auto", "pallas")
+    }
+    assert traces["pallas"] == traces["auto"]
+
+
+def test_engine_decode_impl_validation():
+    with pytest.raises(ValueError, match="decode_impl"):
+        ServeEngine(F32, n_slots=2, max_len=32, seed=0, page_size=4,
+                    decode_impl="cuda")
+    with pytest.raises(ValueError, match="page"):
+        ServeEngine(F32, n_slots=2, max_len=32, seed=0,
+                    decode_impl="pallas")  # paged cache required
